@@ -1,0 +1,38 @@
+"""Paper Figs. 9/10: approximate-search accuracy (MAP + error ratio) when
+visiting 1 node and 1–25 nodes, across all methods."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.search import (approximate_search, average_precision,
+                               error_ratio, extended_search)
+from . import common
+
+NBRS = (1, 5, 10, 25)
+
+
+def run() -> list[tuple[str, float, str]]:
+    db = common.dataset("rand")
+    qs = common.queries()
+    gt = common.ground_truth(db, qs)
+    built = common.build_all(db, common.params())
+    rows = []
+    for name, (idx, _) in built.items():
+        for nbr in NBRS:
+            maps, errs, t_us = [], [], []
+            for q, (gids, gd) in zip(qs, gt):
+                if name == "dstree":
+                    (ids, d, _), dt = common.timed(idx.extended_search, q,
+                                                   common.K, nbr)
+                elif nbr == 1:
+                    (ids, d, _), dt = common.timed(approximate_search, idx, q,
+                                                   common.K)
+                else:
+                    (ids, d, _), dt = common.timed(extended_search, idx, q,
+                                                   common.K, nbr)
+                maps.append(average_precision(ids, gids))
+                errs.append(error_ratio(d, gd))
+                t_us.append(dt * 1e6)
+            rows.append((f"approx/{name}/nbr{nbr}", float(np.mean(t_us)),
+                         f"MAP={np.mean(maps):.3f};err={np.mean(errs):.3f}"))
+    return rows

@@ -1,0 +1,28 @@
+"""Paper Fig. 7 + Table 1: index building efficiency & structure statistics.
+
+The original's build time is disk-I/O-bound (random writes); in this in-core
+JAX setting the I/O term is the leaf count (≈ write granularity), reported as
+``derived``.  Fill factor / height / node counts reproduce Table 1's ranking:
+Dumpy fewest leaves & highest fill factor; TARDIS most leaves pre-packing;
+binary iSAX2+ in between with low fill.
+"""
+from __future__ import annotations
+
+from . import common
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    for ds in ("rand", "skew"):
+        db = common.dataset(ds)
+        built = common.build_all(db, common.params())
+        for name, (idx, dt) in built.items():
+            if name == "dstree":
+                stats = (f"leaves={idx.n_leaves};nodes={idx.n_nodes};"
+                         f"height={idx.height};fill={idx.fill_factor:.3f}")
+            else:
+                s = idx.stats
+                stats = (f"leaves={s.n_leaves};nodes={s.n_nodes};"
+                         f"height={s.height};fill={s.fill_factor:.3f}")
+            rows.append((f"build/{ds}/{name}", dt * 1e6, stats))
+    return rows

@@ -1,0 +1,35 @@
+"""Paper Table 2: exact search — response time, loaded leaves, pruning ratio
+under ED and DTW."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.search import exact_search
+from . import common
+
+
+def run() -> list[tuple[str, float, str]]:
+    db = common.dataset("rand")
+    qs = common.queries()[:8]
+    built = common.build_all(db, common.params())
+    rows = []
+    for metric in ("ed", "dtw"):
+        q_sel = qs if metric == "ed" else qs[:3]
+        db_sel = db if metric == "ed" else db[:2000]
+        for name, (idx, _) in built.items():
+            if metric == "dtw" and name != "dumpy":
+                continue                      # DTW full table: dumpy only (CPU)
+            if name == "dstree":
+                fn = lambda q: idx.exact_search(q, common.K)
+            else:
+                fn = lambda q: exact_search(idx, q, common.K, metric=metric)
+            times, loaded, pruning = [], [], []
+            for q in q_sel:
+                (_, _, st), dt = common.timed(fn, q)
+                times.append(dt * 1e6)
+                loaded.append(st.leaves_visited)
+                pruning.append(st.pruning_ratio)
+            rows.append((f"exact/{metric}/{name}", float(np.mean(times)),
+                         f"loaded={np.mean(loaded):.1f};"
+                         f"pruning={np.mean(pruning):.3f}"))
+    return rows

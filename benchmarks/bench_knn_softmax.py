@@ -1,0 +1,30 @@
+"""Paper §1 application 3 (kNN-softmax [69]): retrieval recall and argmax
+agreement of the Dumpy-backed sparse softmax head vs the exact softmax."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.serving.knn_softmax import KnnSoftmaxHead
+from . import common
+
+
+def run() -> list[tuple[str, float, str]]:
+    rng = np.random.default_rng(0)
+    d, vocab = 64, 8192
+    lm_head = rng.standard_normal((d, vocab)).astype(np.float32) / np.sqrt(d)
+    rows = []
+    for r, nbr in ((128, 4), (512, 8), (1024, 16)):
+        head = KnnSoftmaxHead(lm_head, w=8, th=256, r_candidates=r,
+                              nbr_nodes=nbr)
+        # hidden states near random vocab directions (peaky softmax regime)
+        times = []
+        for _ in range(40):
+            tgt = rng.integers(vocab)
+            h = lm_head[:, tgt] + 0.3 * rng.standard_normal(d).astype(np.float32)
+            _, dt = common.timed(head.step, h)
+            times.append(dt * 1e6)
+        s = head.stats
+        rows.append((f"knn_softmax/R{r}", float(np.mean(times)),
+                     f"recall={s.exact_in_topr/s.tokens:.3f};"
+                     f"agree={s.agree_argmax/s.tokens:.3f}"))
+    return rows

@@ -1,0 +1,44 @@
+"""Paper Figs. 16/17: parameter influence — segments w, objective weight α,
+fuzzy boundary ratio f (MAP@5-nodes + fill factor per setting)."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.index import DumpyIndex
+from repro.core.search import average_precision, extended_search
+from . import common
+
+
+def _map_at(idx, qs, gt, nbr=5):
+    return float(np.mean([
+        average_precision(extended_search(idx, q, common.K, nbr)[0], gids)
+        for q, (gids, _) in zip(qs, gt)]))
+
+
+def run() -> list[tuple[str, float, str]]:
+    db = common.dataset("rand")
+    qs = common.queries()
+    gt = common.ground_truth(db, qs)
+    rows = []
+    for w in (8, 16):                                     # Fig. 16(a)
+        p = common.params(w=w)
+        idx, dt = common.timed(DumpyIndex.build, db, p)
+        rows.append((f"params/w{w}", dt * 1e6,
+                     f"MAP5={_map_at(idx, qs, gt):.3f};"
+                     f"fill={idx.stats.fill_factor:.3f}"))
+    for alpha in (0.0, 0.1, 0.2, 0.5):                    # Fig. 16(b)
+        p = common.params(alpha=alpha)
+        idx, dt = common.timed(DumpyIndex.build, db, p)
+        rows.append((f"params/alpha{alpha}", dt * 1e6,
+                     f"MAP5={_map_at(idx, qs, gt):.3f};"
+                     f"fill={idx.stats.fill_factor:.3f}"))
+    for f in (0.05, 0.1, 0.3):                            # Fig. 17
+        p = common.params(fuzzy_f=f)
+        idx, dt = common.timed(DumpyIndex.build, db, p)
+        rows.append((f"params/fuzzy{f}", dt * 1e6,
+                     f"MAP5={_map_at(idx, qs, gt):.3f};"
+                     f"leaves={idx.stats.n_leaves};"
+                     f"dups={idx.stats.n_duplicates}"))
+    return rows

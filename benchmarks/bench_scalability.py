@@ -1,0 +1,31 @@
+"""Paper Fig. 8: build-time scalability vs collection size and series length
+(linear-growth check: R² of the linear fit is the paper's headline)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.index import DumpyIndex
+from . import common
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    sizes = [5_000, 10_000, 20_000, 40_000]
+    times = []
+    for n in sizes:
+        db = common.dataset("rand", n=n)
+        _, dt = common.timed(DumpyIndex.build, db, common.params())
+        times.append(dt)
+        rows.append((f"scalability/size{n}", dt * 1e6, f"n={n}"))
+    x = np.asarray(sizes, float)
+    y = np.asarray(times)
+    coef = np.polyfit(x, y, 1)
+    resid = y - np.polyval(coef, x)
+    r2 = 1 - resid.var() / y.var()
+    rows.append(("scalability/linear_fit", 0.0, f"R2={r2:.4f}"))
+
+    for length in (64, 128, 256):
+        db = common.dataset("rand", n=10_000, length=length)
+        _, dt = common.timed(DumpyIndex.build, db, common.params())
+        rows.append((f"scalability/len{length}", dt * 1e6, f"len={length}"))
+    return rows

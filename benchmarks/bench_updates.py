@@ -1,0 +1,50 @@
+"""Paper Fig. 18: complete workloads — queries interleaved with insertion
+batches.  Dumpy's re-split/re-pack on overflow keeps the structure healthy;
+we track both throughput and post-update search quality/exactness."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.baselines.brute import brute_force_knn
+from repro.core.baselines.isax2plus import build_isax2plus
+from repro.core.index import DumpyIndex
+from repro.core.search import average_precision, exact_search
+from repro.data.series import random_walks
+from . import common
+
+
+def _workload(idx, inserts: np.ndarray, queries: np.ndarray,
+              batch: int) -> tuple[float, float, bool]:
+    t0 = time.perf_counter()
+    qi = 0
+    exact_ok = True
+    for start in range(0, len(inserts), batch):
+        for s in inserts[start:start + batch]:
+            idx.insert(s)
+        q = queries[qi % len(queries)]
+        qi += 1
+        ids, d, _ = exact_search(idx, q, common.K)
+        gt_ids, gt_d = brute_force_knn(idx.db, q, common.K)
+        exact_ok &= bool(np.allclose(np.sort(d), np.sort(gt_d), atol=1e-3))
+    return time.perf_counter() - t0, qi, exact_ok
+
+
+def run() -> list[tuple[str, float, str]]:
+    base = random_walks(6000, 64, seed=0)
+    inserts = random_walks(600, 64, seed=31)
+    queries = random_walks(10, 64, seed=77)
+    p = common.params(w=8, th=128)
+    rows = []
+    for name, builder in (("dumpy", lambda: DumpyIndex.build(base, p)),
+                          ("isax2plus", lambda: build_isax2plus(base, p))):
+        for batch in (50, 200):
+            idx = builder()
+            dt, n_q, ok = _workload(idx, inserts, queries, batch)
+            sizes = np.diff(idx.flat.leaf_offsets)
+            rows.append((f"updates/{name}/batch{batch}",
+                         dt / max(n_q, 1) * 1e6,
+                         f"exact_ok={ok};leaves={idx.flat.n_leaves};"
+                         f"max_leaf={int(sizes.max())}"))
+    return rows

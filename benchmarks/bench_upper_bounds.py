@@ -1,0 +1,44 @@
+"""Paper Fig. 13: distribution of worst-case (upper-bound) node distances —
+Dumpy's even splits give tighter node regions than binary iSAX."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.sax import breakpoints_ext
+from . import common
+
+
+def _upper_bounds(idx) -> np.ndarray:
+    """sqrt(mean_j range_j^2) per leaf, ranges clamped at the edge regions."""
+    lo = np.asarray(idx.flat.leaf_lo, np.float64)
+    hi = np.asarray(idx.flat.leaf_hi, np.float64)
+    bpe = breakpoints_ext(idx.params.sax.b)
+    finite = np.abs(bpe[1:-1])
+    clamp = finite.max() + (finite.max() - np.sort(finite)[-2])
+    lo = np.clip(lo, -clamp, clamp)
+    hi = np.clip(hi, -clamp, clamp)
+    rng = hi - lo
+    n, w = idx.n, idx.w
+    return np.sqrt((n / w) * (rng ** 2).sum(axis=1))
+
+
+def run() -> list[tuple[str, float, str]]:
+    db = common.dataset("rand")
+    built = common.build_all(db, common.params(), with_dstree=False,
+                             with_fuzzy=False)
+    rows = []
+    ubs = {}
+    for name in ("dumpy", "isax2plus"):
+        idx = built[name][0]
+        ub = _upper_bounds(idx)
+        # weight by leaf occupancy: "how loose is the bound of the node a
+        # random series lives in" — the per-query-relevant statistic (the
+        # unweighted version just rewards having many tiny leaves)
+        sizes = np.diff(idx.flat.leaf_offsets)
+        ubs[name] = np.repeat(ub, sizes)
+        qs = np.percentile(ubs[name], [10, 50, 90])
+        rows.append((f"upper_bound/{name}", 0.0,
+                     f"p10={qs[0]:.1f};p50={qs[1]:.1f};p90={qs[2]:.1f}"))
+    tighter = np.median(ubs["dumpy"]) <= np.median(ubs["isax2plus"])
+    rows.append(("upper_bound/dumpy_tighter_median", 0.0, f"{bool(tighter)}"))
+    return rows

@@ -1,0 +1,87 @@
+"""Shared benchmark fixtures: datasets, index builders, timing."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.baselines.brute import brute_force_knn
+from repro.core.baselines.dstree import DSTreeIndex
+from repro.core.baselines.isax2plus import build_isax2plus
+from repro.core.baselines.tardis import build_tardis
+from repro.core.build import DumpyParams
+from repro.core.index import DumpyIndex
+from repro.core.sax import SaxParams
+from repro.core.split import SplitParams
+from repro.data.series import clustered_series, query_workload, random_walks
+
+# CPU-scaled stand-ins for the paper's 100GB datasets (same generator family)
+N_SERIES = 20_000
+LENGTH = 128
+TH = 256
+W = 16
+N_QUERIES = 25
+K = 10
+
+
+def params(w: int = W, th: int = TH, alpha: float = 0.2,
+           fuzzy_f: float = 0.0) -> DumpyParams:
+    return DumpyParams(sax=SaxParams(w=w, b=8),
+                       split=SplitParams(th=th, alpha=alpha), fuzzy_f=fuzzy_f)
+
+
+_cache: dict = {}
+
+
+def dataset(name: str = "rand", n: int = N_SERIES, length: int = LENGTH):
+    key = (name, n, length)
+    if key not in _cache:
+        if name == "rand":
+            _cache[key] = random_walks(n, length, seed=0)
+        else:                           # 'skew' — the paper's DNA/ECG regime
+            _cache[key] = clustered_series(n, length, n_clusters=64, seed=1)
+    return _cache[key]
+
+
+def queries(length: int = LENGTH, n: int = N_QUERIES):
+    return query_workload(n, length)
+
+
+def ground_truth(db, qs, k: int = K):
+    key = ("gt", id(db), len(qs), k)
+    if key not in _cache:
+        _cache[key] = [brute_force_knn(db, q, k) for q in qs]
+    return _cache[key]
+
+
+BUILDERS = {
+    "dumpy": lambda db, p: DumpyIndex.build(db, p),
+    "isax2plus": lambda db, p: build_isax2plus(db, p),
+    "tardis": lambda db, p: build_tardis(db, p),
+}
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt
+
+
+def build_all(db, p: DumpyParams, with_dstree: bool = True,
+              with_fuzzy: bool = True) -> dict:
+    out = {}
+    for name, fn in BUILDERS.items():
+        idx, dt = timed(fn, db, p)
+        out[name] = (idx, dt)
+    if with_fuzzy:
+        import dataclasses
+        pf = dataclasses.replace(p, fuzzy_f=0.1)
+        idx, dt = timed(DumpyIndex.build, db, pf)
+        out["dumpy-fuzzy"] = (idx, dt)
+    if with_dstree:
+        idx, dt = timed(DSTreeIndex, db, p.th)
+        out["dstree"] = (idx, dt)
+    return out

@@ -1,0 +1,58 @@
+"""Quickstart: build a Dumpy index, query it, check quality vs brute force.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import numpy as np
+
+from repro.core.baselines.brute import brute_force_knn
+from repro.core.build import DumpyParams
+from repro.core.index import DumpyIndex
+from repro.core.sax import SaxParams
+from repro.core.search import (approximate_search, average_precision,
+                               exact_search, extended_search)
+from repro.core.split import SplitParams
+from repro.data.series import query_workload, random_walks
+
+
+def main() -> None:
+    print("generating 20k random-walk series of length 256 ...")
+    db = random_walks(20_000, 256, seed=0)
+    params = DumpyParams(sax=SaxParams(w=16, b=8), split=SplitParams(th=256))
+
+    t0 = time.time()
+    index = DumpyIndex.build(db, params)
+    s = index.stats
+    print(f"built in {time.time()-t0:.1f}s: {s.n_leaves} leaves, "
+          f"height {s.height}, fill factor {s.fill_factor:.0%}")
+
+    queries = query_workload(20, 256)
+    k = 10
+    map1, map25, t_ms = [], [], []
+    for q in queries:
+        gt_ids, gt_d = brute_force_knn(db, q, k)
+        ids1, _, _ = approximate_search(index, q, k)
+        t0 = time.time()
+        ids25, _, _ = extended_search(index, q, k, nbr=25)
+        t_ms.append((time.time() - t0) * 1e3)
+        map1.append(average_precision(ids1, gt_ids))
+        map25.append(average_precision(ids25, gt_ids))
+    print(f"MAP@1-node  = {np.mean(map1):.3f}")
+    print(f"MAP@25-node = {np.mean(map25):.3f}  ({np.mean(t_ms):.1f} ms/query)")
+
+    ids, d, st = exact_search(index, queries[0], k)
+    gt_ids, gt_d = brute_force_knn(db, queries[0], k)
+    assert np.allclose(np.sort(d), np.sort(gt_d), atol=1e-3)
+    print(f"exact search ✓ (visited {st.leaves_visited}/{index.flat.n_leaves} "
+          f"leaves, pruning {st.pruning_ratio:.0%})")
+
+    index.save("/tmp/dumpy_quickstart")
+    index2 = DumpyIndex.load("/tmp/dumpy_quickstart")
+    ids2, d2, _ = exact_search(index2, queries[0], k)
+    assert np.array_equal(ids, ids2)
+    print("save/load roundtrip ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""End-to-end training driver example: a ~100M-parameter OLMo-family model
+for a few hundred steps, with checkpoints and auto-resume.
+
+    PYTHONPATH=src python examples/train_lm.py              # CPU-sized default
+    PYTHONPATH=src python examples/train_lm.py --full-100m  # the real 100M run
+
+Kill it mid-run (Ctrl-C) and rerun: it resumes from the saved step.
+"""
+import sys
+
+from repro.launch import train
+
+
+def main() -> None:
+    if "--full-100m" in sys.argv:
+        argv = ["--arch", "olmo-1b", "--preset", "100m", "--steps", "300",
+                "--batch", "8", "--seq", "512", "--ckpt-every", "50",
+                "--ckpt-dir", "checkpoints/train_lm_100m"]
+    else:
+        # CPU-friendly stand-in: same driver, smaller preset
+        argv = ["--arch", "olmo-1b", "--preset", "smoke", "--steps", "200",
+                "--batch", "8", "--seq", "128", "--ckpt-every", "50",
+                "--ckpt-dir", "checkpoints/train_lm_smoke"]
+    sys.argv = [sys.argv[0]] + argv
+    train.main()
+
+
+if __name__ == "__main__":
+    main()

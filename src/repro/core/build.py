@@ -1,0 +1,258 @@
+"""Dumpy index construction (paper §5.2, Algorithm 1).
+
+The workflow keeps the paper's structure:
+
+  Stage 1  encode the whole collection → SAX table (device: Pallas
+           ``sax_encode``; sharded over the ``data`` mesh axis at scale)
+  Stage 2  initialize the root
+  Stage 3  recursive adaptive splitting from the *complete* SAX table
+           (Algorithm 2 — global statistics, not first-``th+1`` heuristics)
+  Stage 4  leaf-node packing (Algorithm 3)
+  Stage 5  materialization — on TPU this is a permutation of the collection
+           into leaf-contiguous (CSR) layout instead of buffered disk flushes
+
+The tree itself is host-side control structure; all bulk math (encoding,
+histograms, the final permutation) is device work.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from . import fuzzy as fuzzy_mod
+from .pack import Pack, pack_isax, pack_leaves
+from .sax import (SaxParams, next_bits_np, pack_bits_np, sax_encode_np)
+from .split import SplitParams, choose_split_plan, segment_variances
+
+
+@dataclasses.dataclass(frozen=True)
+class DumpyParams:
+    """Full parameter set (paper §7 defaults, scaled by callers)."""
+
+    sax: SaxParams = SaxParams()
+    split: SplitParams = SplitParams()
+    r: float = 1.0            # small-node threshold (× th) for packing
+    rho: float = 0.5          # demotion-bit cap (× lambda)
+    fuzzy_f: float = 0.0      # fuzzy boundary ratio (0 = plain Dumpy)
+    max_replica: int = 3      # per-series duplication cap (paper §7)
+    seed: int = 0
+
+    @property
+    def th(self) -> int:
+        return self.split.th
+
+
+class TreeNode:
+    """One index node.  Leaves carry member series; internal nodes carry the
+    chosen-segment list and an sid → child routing table (paper §5.1)."""
+
+    __slots__ = ("sym", "card", "size", "depth", "csl", "children", "routing",
+                 "series_ids", "leaf_id", "n_leaves", "is_pack", "pack_mask",
+                 "pack_value")
+
+    def __init__(self, sym: np.ndarray, card: np.ndarray, depth: int):
+        self.sym = sym                     # [w] int64 prefix values
+        self.card = card                   # [w] int64 cardinalities (bits)
+        self.size = 0
+        self.depth = depth
+        self.csl: tuple[int, ...] | None = None
+        self.children: dict[int, "TreeNode"] = {}
+        self.routing: dict[int, "TreeNode"] = {}
+        self.series_ids: np.ndarray | None = None
+        self.leaf_id = -1
+        self.n_leaves = 0
+        self.is_pack = False
+        self.pack_mask = 0
+        self.pack_value = 0
+
+    @property
+    def is_leaf(self) -> bool:
+        return self.csl is None
+
+    def route_sid(self, sax_q: np.ndarray, b: int) -> int:
+        """sid of a query under this node's split (promoteiSAX, Alg. 2)."""
+        sid = 0
+        for seg in self.csl:
+            bit = (int(sax_q[seg]) >> (b - 1 - int(self.card[seg]))) & 1
+            sid = (sid << 1) | bit
+        return sid
+
+
+@dataclasses.dataclass
+class BuildStats:
+    n_nodes: int = 0
+    n_leaves: int = 0
+    height: int = 0
+    n_series: int = 0
+    n_duplicates: int = 0
+    fill_factor: float = 0.0
+    plans_evaluated: int = 0
+
+
+class DumpyBuilder:
+    """Host orchestrator for Algorithm 1.  ``build`` accepts either raw series
+    (encodes them) or a precomputed (paa, sax) pair from the device encoder."""
+
+    def __init__(self, params: DumpyParams):
+        self.p = params
+
+    # -- Stage 1 -------------------------------------------------------------
+    def encode(self, db: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        self.p.sax.validate_series_length(db.shape[-1])
+        return sax_encode_np(db, self.p.sax)
+
+    # -- Stages 2-4 ----------------------------------------------------------
+    def build_tree(self, paa: np.ndarray, sax: np.ndarray) -> tuple[TreeNode, BuildStats]:
+        p, w, b = self.p, self.p.sax.w, self.p.sax.b
+        n = sax.shape[0]
+        stats = BuildStats(n_series=n)
+        root = TreeNode(np.zeros(w, np.int64), np.zeros(w, np.int64), depth=0)
+        root.size = n
+        ids = np.arange(n, dtype=np.int64)
+        self._rep_budget = np.full(n, p.max_replica, np.int32)
+        if n <= p.th:
+            root.series_ids = ids
+        else:
+            self._split(root, ids, paa, sax, stats, is_root=True)
+        self._finalize(root, stats)
+        leaves = collect_leaves(root)
+        if leaves:
+            stats.fill_factor = float(np.mean([l.size for l in leaves])) / p.th
+        return root, stats
+
+    def build(self, db: np.ndarray) -> tuple[TreeNode, BuildStats, np.ndarray, np.ndarray]:
+        paa, sax = self.encode(np.asarray(db, dtype=np.float32))
+        root, stats = self.build_tree(paa, sax)
+        return root, stats, paa, sax
+
+    # -------------------------------------------------------------------- --
+    def _split(self, node: TreeNode, ids: np.ndarray, paa: np.ndarray,
+               sax: np.ndarray, stats: BuildStats, is_root: bool = False) -> None:
+        p, w, b = self.p, self.p.sax.w, self.p.sax.b
+        avail = [j for j in range(w) if node.card[j] < b]
+        if not avail:                      # cannot refine further → forced leaf
+            node.series_ids = ids
+            return
+        sax_node = sax[ids]
+
+        if is_root:
+            csl = tuple(range(w)) if len(avail) == w else tuple(avail)  # Alg.2 l.1-2
+        else:
+            bits = next_bits_np(sax_node[:, avail], node.card[avail], b)
+            codes = pack_bits_np(bits)
+            hist = np.bincount(codes, minlength=1 << len(avail)).astype(np.int64)
+            seg_vars = segment_variances(sax_node[:, avail], b)
+            csl = choose_split_plan(hist, seg_vars, avail, len(ids), p.split)
+        node.csl = csl
+        lam = len(csl)
+
+        bits = next_bits_np(sax_node[:, list(csl)], node.card[list(csl)], b)
+        sids = pack_bits_np(bits)
+
+        groups: dict[int, np.ndarray] = {}
+        order = np.argsort(sids, kind="stable")
+        sorted_sids = sids[order]
+        uniq, starts = np.unique(sorted_sids, return_index=True)
+        bounds = np.append(starts, len(sorted_sids))
+        for k, sid in enumerate(uniq):
+            groups[int(sid)] = order[bounds[k]:bounds[k + 1]]
+
+        if p.fuzzy_f > 0.0:
+            dups = fuzzy_mod.fuzzy_duplicates(
+                paa[ids], sids, node.sym, node.card, csl, b, p.fuzzy_f,
+                set(groups), self._rep_budget, ids)
+            for tgt, local_idx in dups:
+                groups[tgt] = np.concatenate([groups[tgt], local_idx])
+                stats.n_duplicates += len(local_idx)
+
+        for sid, local in groups.items():
+            child_ids = ids[local]
+            sym = node.sym.copy()
+            card = node.card.copy()
+            for pos, seg in enumerate(csl):
+                bit = (sid >> (lam - 1 - pos)) & 1
+                sym[seg] = (sym[seg] << 1) | bit
+                card[seg] += 1
+            child = TreeNode(sym, card, node.depth + 1)
+            child.size = len(child_ids)
+            node.children[sid] = child
+            if len(child_ids) > p.th:
+                self._split(child, child_ids, paa, sax, stats)
+            else:
+                child.series_ids = child_ids
+
+        self._pack_children(node)
+
+    def _pack_children(self, node: TreeNode) -> None:
+        """Algorithm 3 on this node's *leaf* children; builds the routing table."""
+        p = self.p
+        lam = len(node.csl)
+        small_sids, small_sizes = [], []
+        node.routing = {}
+        for sid, child in node.children.items():
+            if child.is_leaf and child.size < p.r * p.th:
+                small_sids.append(sid)
+                small_sizes.append(child.size)
+            else:
+                node.routing[sid] = child
+        if len(small_sids) > 1:
+            packs = pack_leaves(small_sids, small_sizes, lam, th=p.th,
+                                r=p.r, rho=p.rho, seed=p.seed)
+        elif small_sids:
+            packs = [Pack(value=small_sids[0], mask=0, size=small_sizes[0], members=[0])]
+        else:
+            packs = []
+        for pk in packs:
+            member_sids = [small_sids[i] for i in pk.members]
+            series = np.concatenate(
+                [node.children[s].series_ids for s in member_sids])
+            sym, card = pack_isax(node.sym, node.card, node.csl, pk, self.p.sax.b)
+            pnode = TreeNode(sym.astype(np.int64), card.astype(np.int64),
+                             node.depth + 1)
+            pnode.size = len(series)
+            pnode.series_ids = series
+            pnode.is_pack = True
+            pnode.pack_mask, pnode.pack_value = pk.mask, pk.value
+            for s in member_sids:
+                node.routing[s] = pnode
+                del node.children[s]
+                node.children[s] = pnode   # children view follows the pack
+
+    # -------------------------------------------------------------------- --
+    def _finalize(self, node: TreeNode, stats: BuildStats) -> int:
+        """Count leaves / height; returns #leaves under ``node``."""
+        stats.n_nodes += 1
+        stats.height = max(stats.height, node.depth)
+        if node.is_leaf:
+            stats.n_leaves += 1
+            node.n_leaves = 1
+            return 1
+        total = 0
+        seen: set[int] = set()
+        for child in node.children.values():
+            if id(child) in seen:
+                continue
+            seen.add(id(child))
+            total += self._finalize(child, stats)
+        node.n_leaves = total
+        return total
+
+
+def collect_leaves(root: TreeNode) -> list[TreeNode]:
+    """All distinct leaves in DFS order (packs appear once)."""
+    out: list[TreeNode] = []
+    seen: set[int] = set()
+
+    def rec(n: TreeNode) -> None:
+        if id(n) in seen:
+            return
+        seen.add(id(n))
+        if n.is_leaf:
+            out.append(n)
+            return
+        for sid in sorted(n.children):
+            rec(n.children[sid])
+
+    rec(root)
+    return out

@@ -1,0 +1,259 @@
+"""DumpyIndex — the queryable artifact.
+
+Combines the host routing tree (approximate-search descent, paper §5.5) with
+flat structure-of-arrays device state (DESIGN.md §2):
+
+* ``leaf_sym / leaf_card``   — iSAX words of every leaf pack  ``[L, w]``
+* ``leaf_lo / leaf_hi``      — precomputed region bounds       ``[L, w] f32``
+* ``leaf_offsets``           — CSR offsets into the ordered collection
+* ``order``                  — permutation: ordered position → original id
+* ``db_ordered``             — the collection in leaf-contiguous layout
+* ``paa_db / sax_db``        — summaries (kept for updates / fuzzy / stats)
+* ``alive``                  — tombstone bit-vector for deletions (§5.6)
+
+Save/load is npz+json (no pickle), including the tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from .build import BuildStats, DumpyBuilder, DumpyParams, TreeNode, collect_leaves
+from .lb import node_bounds_np
+from .sax import sax_encode_np
+
+
+@dataclasses.dataclass
+class FlatLeaves:
+    leaf_sym: np.ndarray       # [L, w] int16 prefix values
+    leaf_card: np.ndarray      # [L, w] uint8
+    leaf_lo: np.ndarray        # [L, w] float32 (clamped)
+    leaf_hi: np.ndarray        # [L, w] float32
+    leaf_offsets: np.ndarray   # [L+1] int64
+    order: np.ndarray          # [total] int64 original ids (with duplicates)
+
+    @property
+    def n_leaves(self) -> int:
+        return len(self.leaf_offsets) - 1
+
+    def leaf_slice(self, leaf_id: int) -> np.ndarray:
+        return self.order[self.leaf_offsets[leaf_id]:self.leaf_offsets[leaf_id + 1]]
+
+
+def flatten_tree(root: TreeNode, b: int) -> FlatLeaves:
+    leaves = collect_leaves(root)
+    L = len(leaves)
+    w = root.sym.shape[0]
+    sym = np.zeros((L, w), np.int16)
+    card = np.zeros((L, w), np.uint8)
+    sizes = np.zeros(L, np.int64)
+    chunks = []
+    for i, leaf in enumerate(leaves):
+        leaf.leaf_id = i
+        sym[i] = leaf.sym
+        card[i] = leaf.card
+        ids = leaf.series_ids if leaf.series_ids is not None else np.empty(0, np.int64)
+        sizes[i] = len(ids)
+        chunks.append(ids)
+    offsets = np.zeros(L + 1, np.int64)
+    np.cumsum(sizes, out=offsets[1:])
+    order = (np.concatenate(chunks) if chunks else np.empty(0, np.int64))
+    lo, hi = node_bounds_np(sym, card, b)
+    return FlatLeaves(sym, card, lo, hi, offsets, order)
+
+
+class DumpyIndex:
+    """Built index over a collection ``db [N, n] float32``."""
+
+    def __init__(self, params: DumpyParams, root: TreeNode, flat: FlatLeaves,
+                 db: np.ndarray, paa: np.ndarray, sax: np.ndarray,
+                 stats: BuildStats):
+        self.params = params
+        self.root = root
+        self.flat = flat
+        self.db = db
+        self.paa = paa
+        self.sax = sax
+        self.stats = stats
+        self.alive = np.ones(db.shape[0], bool)
+        self.db_ordered = db[flat.order]
+        self._pending: list[np.ndarray] = []   # §5.6 insertion buffer
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def build(cls, db: np.ndarray, params: DumpyParams | None = None) -> "DumpyIndex":
+        params = params or DumpyParams()
+        builder = DumpyBuilder(params)
+        db = np.ascontiguousarray(db, dtype=np.float32)
+        root, stats, paa, sax = builder.build(db)
+        flat = flatten_tree(root, params.sax.b)
+        return cls(params, root, flat, db, paa, sax, stats)
+
+    @property
+    def n(self) -> int:
+        return self.db.shape[1]
+
+    @property
+    def w(self) -> int:
+        return self.params.sax.w
+
+    # -- updates (§5.6) -------------------------------------------------------
+    def delete(self, series_id: int) -> None:
+        self.alive[series_id] = False
+
+    def insert(self, series: np.ndarray) -> int:
+        """Append one series; rebuilds the affected subtree when the routing
+        constraint (Eq. 3 band) is violated — here triggered on leaf overflow,
+        the common case.  Returns the new series id."""
+        series = np.asarray(series, np.float32).reshape(1, -1)
+        new_id = self.db.shape[0]
+        paa_s, sax_s = sax_encode_np(series, self.params.sax)
+        self.db = np.concatenate([self.db, series])
+        self.paa = np.concatenate([self.paa, paa_s])
+        self.sax = np.concatenate([self.sax, sax_s])
+        self.alive = np.append(self.alive, True)
+
+        # route to target leaf
+        node = self.root
+        while not node.is_leaf:
+            sid = node.route_sid(sax_s[0], self.params.sax.b)
+            child = node.routing.get(sid) or node.children.get(sid)
+            if child is None:            # new region → fresh leaf under node
+                child = self._new_leaf_under(node, sid, sax_s[0])
+            node = child
+        node.series_ids = np.append(node.series_ids, new_id)
+        node.size += 1
+        if node.size > self.params.th:
+            # overflowing leaf — or full pack (§5.6: the pack is dissolved and
+            # reorganized; its demoted iSAX word is a valid coarser rectangle,
+            # so the adaptive split applies to it directly)
+            node.is_pack = False
+            self._resplit(node)
+        self._refresh_flat()
+        return new_id
+
+    def _new_leaf_under(self, node: TreeNode, sid: int, sax_q: np.ndarray) -> TreeNode:
+        lam = len(node.csl)
+        sym, card = node.sym.copy(), node.card.copy()
+        for pos, seg in enumerate(node.csl):
+            bit = (sid >> (lam - 1 - pos)) & 1
+            sym[seg] = (sym[seg] << 1) | bit
+            card[seg] += 1
+        leaf = TreeNode(sym, card, node.depth + 1)
+        leaf.series_ids = np.empty(0, np.int64)
+        node.children[sid] = leaf
+        node.routing[sid] = leaf
+        return leaf
+
+    def _resplit(self, leaf: TreeNode) -> None:
+        """Re-run the adaptive split on an overflowing leaf (background
+        re-organization in the paper; synchronous here)."""
+        builder = DumpyBuilder(self.params)
+        stats = BuildStats()
+        ids = leaf.series_ids
+        leaf.series_ids = None
+        builder._rep_budget = np.full(self.db.shape[0], self.params.max_replica,
+                                      np.int32)
+        builder._split(leaf, ids, self.paa, self.sax, stats)
+
+    def _refresh_flat(self) -> None:
+        self.flat = flatten_tree(self.root, self.params.sax.b)
+        self.db_ordered = self.db[self.flat.order]
+
+    # -- serialization ---------------------------------------------------------
+    def save(self, path: str) -> None:
+        os.makedirs(path, exist_ok=True)
+        tmp = path + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 db=self.db, paa=self.paa, sax=self.sax, alive=self.alive,
+                 leaf_sym=self.flat.leaf_sym, leaf_card=self.flat.leaf_card,
+                 leaf_offsets=self.flat.leaf_offsets, order=self.flat.order)
+        meta = {"params": _params_to_json(self.params),
+                "stats": dataclasses.asdict(self.stats),
+                "tree": _tree_to_json(self.root)}
+        with open(os.path.join(tmp, "meta.json"), "w") as fh:
+            json.dump(meta, fh)
+        # atomic-ish commit
+        for f in os.listdir(tmp):
+            os.replace(os.path.join(tmp, f), os.path.join(path, f))
+        os.rmdir(tmp)
+
+    @classmethod
+    def load(cls, path: str) -> "DumpyIndex":
+        arrs = np.load(os.path.join(path, "arrays.npz"))
+        with open(os.path.join(path, "meta.json")) as fh:
+            meta = json.load(fh)
+        params = _params_from_json(meta["params"])
+        root = _tree_from_json(meta["tree"])
+        stats = BuildStats(**meta["stats"])
+        flat = flatten_tree(root, params.sax.b)
+        idx = cls(params, root, flat, arrs["db"], arrs["paa"], arrs["sax"], stats)
+        idx.alive = arrs["alive"]
+        return idx
+
+
+# -- json helpers (no pickle) --------------------------------------------------
+
+def _params_to_json(p: DumpyParams) -> dict:
+    return {"w": p.sax.w, "b": p.sax.b, "th": p.split.th,
+            "alpha": p.split.alpha, "f_low": p.split.f_low,
+            "f_high": p.split.f_high, "r": p.r, "rho": p.rho,
+            "fuzzy_f": p.fuzzy_f, "max_replica": p.max_replica, "seed": p.seed}
+
+
+def _params_from_json(d: dict) -> DumpyParams:
+    from .sax import SaxParams
+    from .split import SplitParams
+    return DumpyParams(sax=SaxParams(w=d["w"], b=d["b"]),
+                       split=SplitParams(th=d["th"], alpha=d["alpha"],
+                                         f_low=d["f_low"], f_high=d["f_high"]),
+                       r=d["r"], rho=d["rho"], fuzzy_f=d["fuzzy_f"],
+                       max_replica=d["max_replica"], seed=d["seed"])
+
+
+def _tree_to_json(node: TreeNode, memo: dict | None = None) -> dict:
+    d = {"sym": node.sym.tolist(), "card": node.card.tolist(),
+         "size": node.size, "depth": node.depth, "n_leaves": node.n_leaves,
+         "is_pack": node.is_pack, "pack_mask": node.pack_mask,
+         "pack_value": node.pack_value}
+    if node.is_leaf:
+        d["series_ids"] = (node.series_ids.tolist()
+                           if node.series_ids is not None else [])
+    else:
+        d["csl"] = list(node.csl)
+        # pack nodes can be shared among sids: serialize each once
+        uniq: dict[int, int] = {}
+        nodes_json, edges = [], []
+        for sid, child in sorted(node.children.items()):
+            key = id(child)
+            if key not in uniq:
+                uniq[key] = len(nodes_json)
+                nodes_json.append(_tree_to_json(child))
+            edges.append([sid, uniq[key]])
+        d["child_nodes"] = nodes_json
+        d["edges"] = edges
+    return d
+
+
+def _tree_from_json(d: dict) -> TreeNode:
+    node = TreeNode(np.asarray(d["sym"], np.int64),
+                    np.asarray(d["card"], np.int64), d["depth"])
+    node.size = d["size"]
+    node.n_leaves = d["n_leaves"]
+    node.is_pack = d["is_pack"]
+    node.pack_mask = d["pack_mask"]
+    node.pack_value = d["pack_value"]
+    if "csl" in d:
+        node.csl = tuple(d["csl"])
+        kids = [_tree_from_json(c) for c in d["child_nodes"]]
+        for sid, ki in d["edges"]:
+            node.children[sid] = kids[ki]
+            if kids[ki].is_leaf or True:
+                node.routing[sid] = kids[ki]
+    else:
+        node.series_ids = np.asarray(d["series_ids"], np.int64)
+    return node

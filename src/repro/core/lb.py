@@ -1,0 +1,178 @@
+"""Lower-bounding and true distance functions (ED + DTW).
+
+The load-bearing invariant of the whole iSAX index family is::
+
+    mindist_paa_isax(PAA(q), node) <= ED(q, s)   for every series s in node
+
+which enables exact-search pruning (paper §5.5) — it is property-tested in
+``tests/test_lb_properties.py``.  DTW support follows the iSAX-family
+approach (paper §7 / MESSI [49]): an LB_Keogh-style envelope of the query is
+summarized per segment and bounded against the node regions.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .sax import breakpoints_ext, isax_bounds_np
+
+
+# ---------------------------------------------------------------------------
+# Euclidean distance (true)
+# ---------------------------------------------------------------------------
+
+def ed_np(q: np.ndarray, xs: np.ndarray) -> np.ndarray:
+    """Squared-free ED: ``q [n]``, ``xs [m, n]`` → ``[m]``."""
+    d = xs - q[None, :]
+    return np.sqrt((d * d).sum(axis=1))
+
+
+@jax.jit
+def ed2_batch_jnp(q: jax.Array, xs: jax.Array) -> jax.Array:
+    """Squared ED, batched: ``q [Q, n]``, ``xs [m, n]`` → ``[Q, m]``.
+
+    Uses the MXU-friendly ``|q|^2 + |x|^2 - 2 q·x`` form (same math as the
+    Pallas ``pairwise_l2`` kernel; this is its oracle path)."""
+    qn = (q * q).sum(axis=-1, keepdims=True)          # [Q, 1]
+    xn = (xs * xs).sum(axis=-1)[None, :]              # [1, m]
+    cross = q @ xs.T                                  # [Q, m]  (MXU)
+    return jnp.maximum(qn + xn - 2.0 * cross, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# MINDIST(PAA(q), iSAX region)  — ED lower bound
+# ---------------------------------------------------------------------------
+
+def mindist_paa_bounds_np(paa_q: np.ndarray, lo: np.ndarray, hi: np.ndarray,
+                          n: int) -> np.ndarray:
+    """ED lower bound between a query and everything inside a region.
+
+    ``paa_q: [w]``; ``lo/hi: [..., w]`` region bounds → ``[...]`` distances.
+    ``sqrt(n/w * sum_j d_j^2)`` with ``d_j = max(0, lo_j - paa_j, paa_j - hi_j)``.
+    """
+    w = paa_q.shape[-1]
+    below = np.maximum(lo - paa_q, 0.0)
+    above = np.maximum(paa_q - hi, 0.0)
+    d = np.maximum(below, above)
+    return np.sqrt((n / w) * (d * d).sum(axis=-1))
+
+
+def node_bounds_np(sym: np.ndarray, card: np.ndarray, b: int,
+                   clamp: float = 1e9) -> tuple[np.ndarray, np.ndarray]:
+    """Finite (clamped) region bounds for node tables, ready for device use."""
+    lo, hi = isax_bounds_np(sym, card, b)
+    return (np.clip(lo, -clamp, clamp).astype(np.float32),
+            np.clip(hi, -clamp, clamp).astype(np.float32))
+
+
+@functools.partial(jax.jit, static_argnums=(3,))
+def mindist_jnp(paa_q: jax.Array, lo: jax.Array, hi: jax.Array, n: int) -> jax.Array:
+    """Batched MINDIST: ``paa_q [Q, w]``, ``lo/hi [L, w]`` → ``[Q, L]``
+    (squared, to avoid sqrt in the pruning loop)."""
+    w = paa_q.shape[-1]
+    below = jnp.maximum(lo[None, :, :] - paa_q[:, None, :], 0.0)
+    above = jnp.maximum(paa_q[:, None, :] - hi[None, :, :], 0.0)
+    d = jnp.maximum(below, above)
+    return (n / w) * (d * d).sum(axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# DTW (banded) + envelope lower bound
+# ---------------------------------------------------------------------------
+
+def dtw_envelope_np(q: np.ndarray, r: int) -> tuple[np.ndarray, np.ndarray]:
+    """LB_Keogh envelope: ``U_i = max(q[i-r:i+r+1])``, ``L_i = min(...)``."""
+    n = q.shape[0]
+    idx = np.arange(n)
+    lo_i = np.maximum(idx - r, 0)
+    hi_i = np.minimum(idx + r + 1, n)
+    U = np.array([q[a:z].max() for a, z in zip(lo_i, hi_i)])
+    L = np.array([q[a:z].min() for a, z in zip(lo_i, hi_i)])
+    return U, L
+
+
+def envelope_paa_np(U: np.ndarray, L: np.ndarray, w: int) -> tuple[np.ndarray, np.ndarray]:
+    """Per-segment envelope summary that *preserves the bound*: the segment
+    max of U and min of L (mean would break the lower-bound property)."""
+    n = U.shape[0]
+    return (U.reshape(w, n // w).max(axis=1), L.reshape(w, n // w).min(axis=1))
+
+
+def mindist_dtw_bounds_np(U_seg: np.ndarray, L_seg: np.ndarray,
+                          lo: np.ndarray, hi: np.ndarray, n: int) -> np.ndarray:
+    """DTW lower bound of a query envelope vs. iSAX regions.
+
+    ``d_j = max(0, lo_j - U_j, L_j - hi_j)`` — zero unless the node region is
+    entirely above the envelope max or below the envelope min, so it lower
+    bounds DTW for any warping inside the band (iSAX-DTW, MESSI [49]).
+    """
+    w = U_seg.shape[-1]
+    below = np.maximum(lo - U_seg, 0.0)
+    above = np.maximum(L_seg - hi, 0.0)
+    d = np.maximum(below, above)
+    return np.sqrt((n / w) * (d * d).sum(axis=-1))
+
+
+def lb_keogh_np(xs: np.ndarray, U: np.ndarray, L: np.ndarray) -> np.ndarray:
+    """Per-candidate LB_Keogh (DTW pre-filter): ``xs [m, n]`` → ``[m]``."""
+    above = np.maximum(xs - U[None, :], 0.0)
+    below = np.maximum(L[None, :] - xs, 0.0)
+    d = np.maximum(above, below)
+    return np.sqrt((d * d).sum(axis=1))
+
+
+def dtw_np(a: np.ndarray, b_: np.ndarray, r: int) -> float:
+    """Exact banded DTW (Sakoe–Chiba, window ``r``), host reference."""
+    n, m = len(a), len(b_)
+    INF = np.inf
+    prev = np.full(m + 1, INF)
+    prev[0] = 0.0
+    for i in range(1, n + 1):
+        cur = np.full(m + 1, INF)
+        j_lo, j_hi = max(1, i - r), min(m, i + r)
+        for j in range(j_lo, j_hi + 1):
+            c = (a[i - 1] - b_[j - 1]) ** 2
+            cur[j] = c + min(prev[j], prev[j - 1], cur[j - 1])
+        prev = cur
+    return float(np.sqrt(prev[m]))
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def dtw_batch_jnp(q: jax.Array, xs: jax.Array, r: int) -> jax.Array:
+    """Banded DTW of one query vs a batch: ``q [n]``, ``xs [m, n]`` → ``[m]``.
+
+    Row-wise DP via ``lax.scan``; each carried row is the full length-n
+    frontier with out-of-band cells masked to +inf.  O(n^2) cells but
+    vectorized over the candidate batch — the band mask keeps the *math*
+    identical to the banded reference.
+    """
+    n = q.shape[0]
+    m = xs.shape[0]
+    INF = jnp.float32(jnp.inf)
+    jidx = jnp.arange(n)
+
+    def row(prev, i):
+        # prev: [m, n] DP row i-1 (prev[:, j] = D(i-1, j))
+        cost = (xs[:, :] - q[i]) ** 2                      # [m, n] cost(i, j)
+        in_band = jnp.abs(jidx - i) <= r                   # [n]
+        prev_up = prev                                      # D(i-1, j)
+        prev_diag = jnp.concatenate(
+            [jnp.where(i == 0, 0.0, INF)[None] * jnp.ones((m, 1)), prev[:, :-1]], axis=1)
+
+        def cell(carry, j):
+            left = carry                                    # D(i, j-1), [m]
+            best = jnp.minimum(jnp.minimum(prev_up[:, j], prev_diag[:, j]), left)
+            val = jnp.where(in_band[j], cost[:, j] + best, INF)
+            return val, val
+
+        init_left = jnp.full((m,), INF)
+        _, rows = jax.lax.scan(cell, init_left, jnp.arange(n))
+        new = rows.T                                        # [m, n]
+        return new, None
+
+    prev0 = jnp.full((m, n), INF)
+    last, _ = jax.lax.scan(row, prev0, jnp.arange(n))
+    return jnp.sqrt(last[:, n - 1])

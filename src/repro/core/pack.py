@@ -1,0 +1,111 @@
+"""Leaf-node packing (paper §5.4, Algorithm 3).
+
+After a split, sibling leaves that are small (< ``r * th`` series) are merged
+into *packs*.  A pack is identified by a ``(value, mask)`` pair over the
+parent's ``lambda``-bit sid space: ``mask`` bits are *demoted* (wildcard ``*``)
+positions; all member sids agree on the non-masked bits.  The number of
+demoted bits is capped at ``rho * lambda`` so the pack keeps a tight iSAX
+word — this is what preserves pruning power vs. TARDIS-style size-only
+partitions (paper §5.4).
+
+On TPU the pack is the unit of contiguous HBM layout (DESIGN.md §2): the
+fewer, fuller packs Dumpy produces translate directly into fewer, larger
+sequential reads during search.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def popcount(x: int) -> int:
+    return bin(x).count("1")
+
+
+@dataclasses.dataclass
+class Pack:
+    value: int              # representative sid (non-masked bits meaningful)
+    mask: int               # demoted (wildcard) bit positions
+    size: int
+    members: list[int]      # indices into the sibling-leaf list
+
+    def demotion_bits(self) -> int:
+        return popcount(self.mask)
+
+    def try_cost(self, sid: int) -> int:
+        """Additional demotion bits if ``sid`` joined this pack."""
+        new_mask = self.mask | ((self.value ^ sid) & ~self.mask)
+        return popcount(new_mask) - popcount(self.mask)
+
+    def insert(self, sid: int, size: int, member: int) -> None:
+        self.mask |= (self.value ^ sid) & ~self.mask
+        self.size += size
+        self.members.append(member)
+
+
+def pack_leaves(sids: list[int], sizes: list[int], lam: int, *,
+                th: int, r: float = 1.0, rho: float = 0.5,
+                seed: int = 0) -> list[Pack]:
+    """Algorithm 3.  ``sids``/``sizes`` describe the *small* sibling leaves of
+    one parent (callers pre-filter with ``size < r * th``).  Returns packs
+    covering every input leaf exactly once.
+
+    Faithful details: the pack list is seeded with ``floor(sum_size / th)``
+    randomly chosen leaves (Alg. 3 line 6); each remaining leaf joins the
+    feasible pack with least demotion cost (ties → first), else opens a new
+    pack; feasibility = pack size stays ≤ th *and* demotion bits stay
+    ≤ rho * lambda.
+    """
+    n = len(sids)
+    if n == 0:
+        return []
+    max_demote = rho * lam
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(n)
+    sum_size = int(sum(sizes))
+    n_seed = min(max(sum_size // th, 1), n)
+
+    packs: list[Pack] = []
+    seeded = set()
+    for i in order[:n_seed]:
+        i = int(i)
+        packs.append(Pack(value=sids[i], mask=0, size=sizes[i], members=[i]))
+        seeded.add(i)
+
+    for i in range(n):
+        if i in seeded:
+            continue
+        sid, size = sids[i], sizes[i]
+        best_pack, best_cost = None, lam + 1
+        for p in packs:
+            if p.size + size > th:
+                continue
+            cost = p.try_cost(sid)
+            if p.demotion_bits() + cost > max_demote:
+                continue
+            if cost < best_cost:
+                best_pack, best_cost = p, cost
+        if best_pack is None:
+            packs.append(Pack(value=sid, mask=0, size=size, members=[i]))
+        else:
+            best_pack.insert(sid, size, i)
+    return packs
+
+
+def pack_isax(parent_sym: np.ndarray, parent_card: np.ndarray,
+              csl: tuple[int, ...], pack: Pack, b: int) -> tuple[np.ndarray, np.ndarray]:
+    """iSAX word of a pack: parent word refined on the chosen segments whose
+    sid bit was *not* demoted (demoted segments keep the parent cardinality —
+    exactly the 'demote bits' semantics of §5.4)."""
+    sym = parent_sym.astype(np.int64).copy()
+    card = parent_card.astype(np.int64).copy()
+    lam = len(csl)
+    for pos, seg in enumerate(csl):
+        bitpos = lam - 1 - pos                       # pos 0 = MSB
+        if (pack.mask >> bitpos) & 1:
+            continue                                 # demoted → stay coarse
+        bit = (pack.value >> bitpos) & 1
+        sym[seg] = (sym[seg] << 1) | bit
+        card[seg] += 1
+    return sym.astype(np.uint16), card.astype(np.uint8)

@@ -1,0 +1,250 @@
+"""Query answering (paper §5.5): approximate, extended approximate (Alg. 4)
+and exact kNN with lower-bound pruning, under ED and DTW.
+
+Host code orchestrates leaf visit order (the analogue of disk scheduling);
+bulk math (lower bounds over the node table, candidate verification) is
+vectorized and backed by the Pallas kernels on device (``repro.kernels.ops``)
+with numpy fallbacks used for small problems / host tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import numpy as np
+
+from .build import TreeNode
+from .index import DumpyIndex
+from .lb import (dtw_envelope_np, dtw_np, ed_np, envelope_paa_np,
+                 lb_keogh_np, mindist_dtw_bounds_np, mindist_paa_bounds_np,
+                 node_bounds_np)
+from .sax import sax_encode_np
+
+
+@dataclasses.dataclass
+class SearchStats:
+    leaves_visited: int = 0
+    series_scanned: int = 0
+    pruning_ratio: float = 0.0
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def _encode_query(index: DumpyIndex, q: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    paa, sax = sax_encode_np(q.reshape(1, -1), index.params.sax)
+    return paa[0], sax[0]
+
+
+def _leaf_candidates(index: DumpyIndex, leaf_id: int) -> tuple[np.ndarray, np.ndarray]:
+    """(original ids, raw series) of one leaf pack — a contiguous slab."""
+    lo = index.flat.leaf_offsets[leaf_id]
+    hi = index.flat.leaf_offsets[leaf_id + 1]
+    ids = index.flat.order[lo:hi]
+    return ids, index.db_ordered[lo:hi]
+
+
+def _dists(q: np.ndarray, xs: np.ndarray, metric: str, band: int) -> np.ndarray:
+    if metric == "ed":
+        return ed_np(q, xs)
+    return np.array([dtw_np(q, x, band) for x in xs])
+
+
+def _merge_topk(heap: list, ids: np.ndarray, dists: np.ndarray, alive: np.ndarray,
+                k: int) -> None:
+    """Maintain a max-heap of (−dist, id) with per-id dedup (fuzzy duplicates)."""
+    seen = {i for _, i in heap}
+    for d, i in zip(dists, ids):
+        i = int(i)
+        if not alive[i] or i in seen:
+            continue
+        if len(heap) < k:
+            heapq.heappush(heap, (-float(d), i))
+            seen.add(i)
+        elif -heap[0][0] > d:
+            heapq.heappushpop(heap, (-float(d), i))
+            seen.add(i)
+
+
+def _heap_result(heap: list) -> tuple[np.ndarray, np.ndarray]:
+    pairs = sorted([(-nd, i) for nd, i in heap])
+    return (np.array([i for _, i in pairs], np.int64),
+            np.array([d for d, _ in pairs], np.float32))
+
+
+def _node_lb(node: TreeNode, paa_q: np.ndarray, n: int, b: int) -> float:
+    lo, hi = node_bounds_np(node.sym[None, :], node.card[None, :], b)
+    return float(mindist_paa_bounds_np(paa_q, lo, hi, n)[0])
+
+
+# ---------------------------------------------------------------------------
+# approximate search — one target leaf (paper §5.5)
+# ---------------------------------------------------------------------------
+
+def approximate_search(index: DumpyIndex, q: np.ndarray, k: int,
+                       metric: str = "ed") -> tuple[np.ndarray, np.ndarray, SearchStats]:
+    paa_q, sax_q = _encode_query(index, q)
+    b, n = index.params.sax.b, index.n
+    band = max(1, int(0.1 * n))
+    node = index.root
+    while not node.is_leaf:
+        sid = node.route_sid(sax_q, b)
+        child = node.routing.get(sid) or node.children.get(sid)
+        if child is None:   # empty region → most promising existing child
+            child = min(node.children.values(),
+                        key=lambda c: _node_lb(c, paa_q, n, b))
+        node = child
+    ids, xs = _leaf_candidates(index, node.leaf_id)
+    heap: list = []
+    _merge_topk(heap, ids, _dists(q, xs, metric, band), index.alive, k)
+    stats = SearchStats(leaves_visited=1, series_scanned=len(ids),
+                        pruning_ratio=1.0 - 1.0 / max(index.flat.n_leaves, 1))
+    rid, rd = _heap_result(heap)
+    return rid, rd, stats
+
+
+# ---------------------------------------------------------------------------
+# extended approximate search — Algorithm 4
+# ---------------------------------------------------------------------------
+
+def extended_search(index: DumpyIndex, q: np.ndarray, k: int, nbr: int,
+                    metric: str = "ed") -> tuple[np.ndarray, np.ndarray, SearchStats]:
+    paa_q, sax_q = _encode_query(index, q)
+    b, n = index.params.sax.b, index.n
+    band = max(1, int(0.1 * n))
+
+    # descend to the smallest subtree around the target with <= nbr leaves
+    parent, node = None, index.root
+    while node is not None and not node.is_leaf and node.n_leaves > nbr:
+        sid = node.route_sid(sax_q, b)
+        parent, node = node, (node.routing.get(sid) or node.children.get(sid))
+
+    siblings: list[TreeNode]
+    if parent is None:          # whole tree is within budget
+        siblings = [node] if node is not None else []
+    else:
+        seen: set[int] = set()
+        siblings = []
+        for c in parent.children.values():
+            if id(c) not in seen:
+                seen.add(id(c))
+                siblings.append(c)
+    siblings.sort(key=lambda c: _node_lb(c, paa_q, n, b))
+
+    heap: list = []
+    stats = SearchStats()
+    for sib in siblings:
+        if stats.leaves_visited >= nbr:
+            break
+        for leaf in _leaves_under(sib):
+            if stats.leaves_visited >= nbr:
+                break
+            ids, xs = _leaf_candidates(index, leaf.leaf_id)
+            _merge_topk(heap, ids, _dists(q, xs, metric, band), index.alive, k)
+            stats.leaves_visited += 1
+            stats.series_scanned += len(ids)
+    stats.pruning_ratio = 1.0 - stats.leaves_visited / max(index.flat.n_leaves, 1)
+    rid, rd = _heap_result(heap)
+    return rid, rd, stats
+
+
+def _leaves_under(node: TreeNode) -> list[TreeNode]:
+    out, seen = [], set()
+
+    def rec(x: TreeNode) -> None:
+        if id(x) in seen:
+            return
+        seen.add(id(x))
+        if x.is_leaf:
+            out.append(x)
+        else:
+            for c in x.children.values():
+                rec(c)
+
+    rec(node)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# exact search — lower-bound pruning (paper §5.5/§7.2.2)
+# ---------------------------------------------------------------------------
+
+def exact_search(index: DumpyIndex, q: np.ndarray, k: int,
+                 metric: str = "ed") -> tuple[np.ndarray, np.ndarray, SearchStats]:
+    n, b = index.n, index.params.sax.b
+    band = max(1, int(0.1 * n))
+    paa_q, _ = _encode_query(index, q)
+
+    # 1) seed best-so-far from the approximate answer
+    ids0, d0, _ = approximate_search(index, q, k, metric)
+    heap: list = []
+    _merge_topk(heap, ids0, d0, index.alive, k)
+
+    # 2) lower bounds to every leaf pack
+    if metric == "ed":
+        lbs = mindist_paa_bounds_np(paa_q, index.flat.leaf_lo,
+                                    index.flat.leaf_hi, n)
+    else:
+        U, L = dtw_envelope_np(q, band)
+        U_seg, L_seg = envelope_paa_np(U, L, index.w)
+        lbs = mindist_dtw_bounds_np(U_seg, L_seg, index.flat.leaf_lo,
+                                    index.flat.leaf_hi, n)
+
+    order = np.argsort(lbs, kind="stable")
+    stats = SearchStats(leaves_visited=1)
+    kth = (-heap[0][0]) if len(heap) == k else np.inf
+    for leaf_id in order:
+        if lbs[leaf_id] >= kth:
+            break                       # sorted ⇒ everything further prunes
+        ids, xs = _leaf_candidates(index, int(leaf_id))
+        if metric == "dtw":
+            # candidate-level LB_Keogh pre-filter (Pallas `lb_keogh` on TPU):
+            # only survivors pay the O(n·band) exact DTW
+            lbk = lb_keogh_np(xs, U, L)
+            sel = lbk < kth
+            d = np.full(len(ids), np.inf)
+            if sel.any():
+                d[sel] = _dists(q, xs[sel], metric, band)
+            stats.series_scanned += int(sel.sum())
+        else:
+            d = _dists(q, xs, metric, band)
+            stats.series_scanned += len(ids)
+        _merge_topk(heap, ids, d, index.alive, k)
+        stats.leaves_visited += 1
+        kth = (-heap[0][0]) if len(heap) == k else np.inf
+    stats.pruning_ratio = 1.0 - stats.leaves_visited / max(index.flat.n_leaves, 1)
+    rid, rd = _heap_result(heap)
+    return rid, rd, stats
+
+
+# ---------------------------------------------------------------------------
+# evaluation measures (paper §7 [Measures])
+# ---------------------------------------------------------------------------
+
+def average_precision(approx_ids: np.ndarray, exact_ids: np.ndarray) -> float:
+    """AP = (1/k) Σ_i P(q,i)·rel(i); rel(i)=1 iff the i-th result is a true
+    neighbor; P(q,i) = precision among the top-i."""
+    k = len(exact_ids)
+    truth = set(int(i) for i in exact_ids)
+    hits, ap = 0, 0.0
+    for i, a in enumerate(approx_ids[:k], start=1):
+        rel = int(a) in truth
+        hits += rel
+        if rel:
+            ap += hits / i
+    return ap / k
+
+
+def error_ratio(approx_d: np.ndarray, exact_d: np.ndarray) -> float:
+    """(1/k) Σ dist(a_i)/dist(r_i), guarding zero distances."""
+    k = len(exact_d)
+    num = np.asarray(approx_d[:k], np.float64)
+    den = np.asarray(exact_d, np.float64)
+    if len(num) < k:   # pad missing results with worst observed
+        pad = np.full(k - len(num), num.max() if len(num) else 1.0)
+        num = np.concatenate([num, pad])
+    mask = den > 1e-12
+    out = np.ones(k)
+    out[mask] = num[mask] / den[mask]
+    return float(out.mean())

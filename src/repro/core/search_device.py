@@ -1,0 +1,127 @@
+"""Fully-jitted exact kNN with lower-bound pruning — the device-resident
+analogue of ``search.exact_search`` (DESIGN.md §2).
+
+The host variant walks leaves in LB order and stops early (the disk-search
+analogue).  This variant expresses the same plan as one XLA program:
+
+    lb        = MINDIST(PAA(q), every leaf)           (lb_isax math)
+    order     = argsort(lb)
+    while lb[order[i]] < kth_best:                    (lax.while_loop)
+        slab  = dynamic_slice(ordered collection)     (contiguous leaf pack)
+        d     = |q - slab|²                           (MXU form)
+        topk  = merge(topk, d)
+
+Leaf packs are variable-length; each iteration loads a fixed ``chunk`` window
+starting at the leaf offset and masks the tail (leaves longer than ``chunk``
+are covered by subsequent windows of the same leaf — handled by iterating
+windows, not leaves).  Early termination carries over windows because window
+LB = its leaf's LB.
+
+Used by tests as a cross-check of the host search and by the serving path
+when the whole collection is device-resident.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .index import DumpyIndex
+from .sax import sax_encode_np
+
+
+@functools.partial(jax.jit, static_argnames=("k", "chunk"))
+def _exact_knn_device(q: jax.Array, db_ordered: jax.Array,
+                      win_start: jax.Array, win_lead: jax.Array,
+                      win_size: jax.Array, win_lb: jax.Array,
+                      seed_d2: jax.Array, seed_ids: jax.Array, *, k: int,
+                      chunk: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """``win_*``: per fixed-size window (precomputed, sorted by LB asc);
+    ``lead`` masks the shifted prefix of end-clamped windows so every
+    collection position is scanned by exactly one window."""
+    n_win = win_start.shape[0]
+    N = db_ordered.shape[0]
+
+    def cond(carry):
+        i, topd, topi = carry
+        kth = topd[k - 1]
+        return (i < n_win) & (win_lb[i] < kth)
+
+    def body(carry):
+        i, topd, topi = carry
+        start = win_start[i]
+        slab = jax.lax.dynamic_slice(db_ordered, (start, 0),
+                                     (chunk, db_ordered.shape[1]))
+        d2 = ((slab - q[None, :]) ** 2).sum(-1)
+        j = jnp.arange(chunk)
+        valid = (j >= win_lead[i]) & (j < win_lead[i] + win_size[i])
+        d2 = jnp.where(valid, d2, jnp.inf)
+        ids = jnp.clip(start + jnp.arange(chunk), 0, N - 1)
+        alld = jnp.concatenate([topd, d2])
+        alli = jnp.concatenate([topi, ids])
+        neg, sel = jax.lax.top_k(-alld, k)
+        return i + 1, -neg, alli[sel]
+
+    init = (jnp.int32(0), seed_d2, seed_ids)
+    i, topd, topi = jax.lax.while_loop(cond, body, init)
+    return jnp.sqrt(topd), topi, i
+
+
+def exact_search_device(index: DumpyIndex, q: np.ndarray, k: int,
+                        chunk: int = 512) -> tuple[np.ndarray, np.ndarray, int]:
+    """Returns (original ids, distances, windows visited)."""
+    n = index.n
+    paa_q, _ = sax_encode_np(q.reshape(1, -1), index.params.sax)
+    from .lb import mindist_paa_bounds_np
+    lb = mindist_paa_bounds_np(paa_q[0], index.flat.leaf_lo,
+                               index.flat.leaf_hi, n)
+
+    # windows: split each leaf pack into fixed-size spans (host, tiny)
+    starts, leads, sizes, lbs = [], [], [], []
+    offs = index.flat.leaf_offsets
+    total = offs[-1]
+    for lid in range(index.flat.n_leaves):
+        s, e = int(offs[lid]), int(offs[lid + 1])
+        for w0 in range(s, e, chunk):
+            # clamp the slice start so dynamic_slice never goes OOB; the
+            # shifted prefix is masked out via `lead` (no double scanning)
+            st = min(w0, max(total - chunk, 0))
+            starts.append(st)
+            leads.append(w0 - st)
+            sizes.append(min(e - w0, chunk))
+            lbs.append(lb[lid])
+    order = np.argsort(lbs, kind="stable")
+    win_start = jnp.asarray(np.asarray(starts)[order], jnp.int32)
+    win_lead = jnp.asarray(np.asarray(leads)[order], jnp.int32)
+    win_size = jnp.asarray(np.asarray(sizes)[order], jnp.int32)
+    win_lb = jnp.asarray(np.asarray(lbs)[order], jnp.float32)
+
+    # internal margin only when the layout can yield duplicate/removed ids
+    # (fuzzy duplication, tombstones); a margin weakens early termination,
+    # so the plain layout searches exactly k
+    kk = k
+    if index.stats.n_duplicates > 0:
+        kk = k * (1 + index.params.max_replica)
+    if not index.alive.all():
+        kk += 8
+    seed_d2 = jnp.full((kk,), jnp.inf, jnp.float32)
+    seed_ids = jnp.zeros((kk,), jnp.int32)
+    d, pos, visited = _exact_knn_device(
+        jnp.asarray(q, jnp.float32), jnp.asarray(index.db_ordered),
+        win_start, win_lead, win_size, win_lb, seed_d2, seed_ids, k=kk,
+        chunk=chunk)
+    pos = np.asarray(pos)
+    ids = index.flat.order[pos]
+    d = np.asarray(d)
+    # dedup fuzzy duplicates / tombstones on host (tiny k-sized fixup)
+    keep, seen = [], set()
+    for j in range(len(ids)):
+        i = int(ids[j])
+        if i in seen or not index.alive[i]:
+            continue
+        seen.add(i)
+        keep.append(j)
+    keep = np.asarray(keep[:k], int)
+    return ids[keep], d[keep], int(visited)

@@ -1,0 +1,52 @@
+"""Data-series generation and preparation (paper §7 [Datasets]).
+
+``random_walks`` reproduces the paper's synthetic *Rand* dataset: cumulative
+sums of N(0,1) steps, z-normalized.  Query workloads are drawn from the same
+process but excluded from the collection (paper: 200 held-out queries).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def z_normalize(x: np.ndarray, eps: float = 1e-8) -> np.ndarray:
+    mu = x.mean(axis=-1, keepdims=True)
+    sd = x.std(axis=-1, keepdims=True)
+    return ((x - mu) / np.maximum(sd, eps)).astype(np.float32)
+
+
+def random_walks(n_series: int, length: int, seed: int = 0) -> np.ndarray:
+    """The paper's Rand generator: z-normalized Gaussian random walks."""
+    rng = np.random.default_rng(seed)
+    steps = rng.standard_normal((n_series, length), dtype=np.float32)
+    return z_normalize(np.cumsum(steps, axis=-1))
+
+
+def query_workload(n_queries: int, length: int, seed: int = 10_007) -> np.ndarray:
+    """Held-out queries (disjoint seed stream from the collection)."""
+    return random_walks(n_queries, length, seed=seed)
+
+
+def clustered_series(n_series: int, length: int, n_clusters: int = 32,
+                     noise: float = 0.25, seed: int = 1) -> np.ndarray:
+    """Skewed synthetic collection (dense + sparse regions — the §5.1 node
+    imbalance regime): random-walk cluster centroids + Gaussian perturbation."""
+    rng = np.random.default_rng(seed)
+    centroids = random_walks(n_clusters, length, seed=seed + 1)
+    # zipf-ish skewed assignment
+    p = 1.0 / np.arange(1, n_clusters + 1)
+    p /= p.sum()
+    assign = rng.choice(n_clusters, size=n_series, p=p)
+    x = centroids[assign] + noise * rng.standard_normal(
+        (n_series, length)).astype(np.float32)
+    return z_normalize(x)
+
+
+def pad_to_multiple(x: np.ndarray, w: int) -> np.ndarray:
+    """Right-pad series with their last value so that ``n % w == 0``."""
+    n = x.shape[-1]
+    rem = (-n) % w
+    if rem == 0:
+        return x
+    pad = np.repeat(x[..., -1:], rem, axis=-1)
+    return np.concatenate([x, pad], axis=-1)

@@ -1,0 +1,85 @@
+"""Post-compile HLO analysis: collective bytes, op census, roofline inputs.
+
+``collective_bytes`` sums the operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute in the compiled (partitioned)
+module — the §Roofline collective term numerator.  Async pairs are counted at
+the ``-start`` op only.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(pred|[suf]\d+|bf16|c64|c128)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(\([^=]*?\)|[^\s(]+)\s")
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_OPERAND_RE = re.compile(r"\(([^)]*)\)")
+_NAME_RE = re.compile(r"%[\w.\-]+")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _type_bytes(type_str: str) -> int:
+    return sum(_shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(type_str))
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-kind (count, bytes) + total bytes.
+
+    Operands are referenced by name in compiled HLO, so byte sizes come from
+    a first-pass symbol table of op result types.  ``-done`` halves of async
+    pairs are skipped (their ``-start`` already carries the transfer)."""
+    sizes: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        dm = _DEF_RE.match(line)
+        if dm:
+            sizes[dm.group(1)] = _type_bytes(dm.group(2))
+
+    stats: dict[str, dict] = defaultdict(lambda: {"count": 0, "bytes": 0})
+    total = 0
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m or m.group(2) == "-done":
+            continue
+        kind = m.group(1)
+        om = _OPERAND_RE.search(line[m.end() - 1:])
+        b = 0
+        if om:
+            for name in _NAME_RE.findall(om.group(1)):
+                b += sizes.get(name, 0)
+        if b == 0:  # fall back to the result type on the def line itself
+            dm = _DEF_RE.match(line)
+            if dm:
+                b = sizes.get(dm.group(1), 0)
+        stats[kind]["count"] += 1
+        stats[kind]["bytes"] += b
+        total += b
+    return {"per_kind": dict(stats), "total_bytes": total}
+
+
+def op_census(hlo_text: str, top: int = 15) -> list[tuple[str, int]]:
+    """Most frequent HLO opcodes — remat/redundancy smoke signal."""
+    counts: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*(?:\([^)]*\)|\S+)\s+([a-z][a-z0-9-]*)\(", line)
+        if m:
+            counts[m.group(1)] += 1
+    return sorted(counts.items(), key=lambda kv: -kv[1])[:top]

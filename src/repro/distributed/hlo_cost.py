@@ -1,0 +1,297 @@
+"""Loop-aware static cost analysis over compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body **once** —
+useless for scan-over-layers models where >95% of work sits inside the layer
+loop.  This analyzer parses the compiled module, builds the computation call
+graph, extracts loop trip counts, and accumulates three metrics with proper
+``trip_count ×`` scaling:
+
+  * ``flops``            — 2·prod(result)·prod(contracting) per dot
+  * ``hbm_bytes``        — operands + result of every top-level instruction
+                           (each fusion counted as one instruction — the same
+                           cost model XLA itself uses for fused computations)
+  * ``collective_bytes`` — operand bytes of collective ops (all-reduce /
+                           all-gather / reduce-scatter / all-to-all /
+                           collective-permute), ``-done`` halves skipped
+
+Trip counts come from the loop condition's comparison constant (the canonical
+form XLA emits for ``lax.scan`` / ``lax.fori_loop``); unknown conditions
+default to 1 and are reported in ``unknown_loops``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b(pred|[suf]\d+|bf16|c64|c128|f8e4m3fn|f8e5m2)\[([\d,]*)\]")
+_BLOCK_START = re.compile(r"^\s*(?:ENTRY\s+)?(%[\w.\-]+)\s*(?:\([^{]*\))?\s*->.*{\s*$")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*")
+_NAME_RE = re.compile(r"%[\w.\-]+")
+_CALL_ATTRS = ("calls=", "to_apply=", "body=", "condition=",
+               "true_computation=", "false_computation=")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "copy-start", "copy-done"}
+
+# HBM-traffic accounting keeps two bounds because the CPU backend's fusion
+# granularity is far finer than TPU's:
+#   hbm_bytes     (dot-centric, roofline term) — dots/convs, data movement,
+#                 collectives, cache updates; elementwise/fusion buffers are
+#                 assumed fused away on the TPU target.
+#   hbm_bytes_hi  (pessimistic) — additionally counts every CPU-fusion's
+#                 operands+result (upper bound; real TPU traffic lies between).
+_MATERIALIZING = {"dot", "convolution", "reduce", "reduce-window",
+                  "scatter", "gather", "dynamic-slice", "dynamic-update-slice",
+                  "sort", "concatenate", "copy", "transpose", "pad",
+                  "select-and-scatter", "rng", "cholesky", "triangular-solve",
+                  "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute", "custom-call"}
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
+    total_b = 0
+    elems = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        total_b += n * _DTYPE_BYTES.get(dt, 4)
+    return elems, total_b
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    opcode: str
+    result_type: str
+    operands: list[str]
+    line: str
+
+
+@dataclasses.dataclass
+class _Block:
+    name: str
+    instrs: list[_Instr]
+    types: dict[str, str]          # symbol table: name → result type string
+
+
+_OPCODE_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|[^\s(]+))\s+([a-z][a-z0-9\-]*)\(")
+
+
+def parse_blocks(text: str) -> dict[str, _Block]:
+    blocks: dict[str, _Block] = {}
+    cur: _Block | None = None
+    for raw in text.splitlines():
+        m = _BLOCK_START.match(raw)
+        if m and "{" in raw:
+            cur = _Block(m.group(1), [], {})
+            blocks[cur.name] = cur
+            # parameters typed in the header
+            for pm in re.finditer(r"(%?[\w.\-]+)\s*:\s*((?:\([^)]*\)|[^,)]+))",
+                                  raw[raw.find("("):]):
+                nm = pm.group(1)
+                if not nm.startswith("%"):
+                    nm = "%" + nm
+                cur.types[nm] = pm.group(2)
+            continue
+        if cur is None:
+            continue
+        if raw.strip() == "}":
+            cur = None
+            continue
+        dm = _DEF_RE.match(raw)
+        if not dm:
+            continue
+        om = _OPCODE_RE.search(raw)
+        if not om:
+            continue
+        result_type, opcode = om.group(1), om.group(2)
+        # operands: first (...) after the opcode
+        rest = raw[om.end() - 1:]
+        depth = 0
+        args = ""
+        for ch in rest:
+            if ch == "(":
+                depth += 1
+                if depth == 1:
+                    continue
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            if depth >= 1:
+                args += ch
+        operands = _NAME_RE.findall(args)
+        inst = _Instr(dm.group(1), opcode, result_type, operands, raw)
+        cur.instrs.append(inst)
+        cur.types[inst.name] = result_type
+    return blocks
+
+
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_DIMS_RE = re.compile(r"\[([\d,]*)\]")
+
+
+def _dot_flops(inst: _Instr, block: _Block) -> float:
+    """2 · prod(result dims) · prod(lhs contracting dim sizes)."""
+    rm = _SHAPE_RE.search(inst.result_type)
+    if not rm:
+        return 0.0
+    res_elems = 1
+    if rm.group(2):
+        for d in rm.group(2).split(","):
+            res_elems *= int(d)
+    lhs_type = block.types.get(inst.operands[0], "") if inst.operands else ""
+    lm = _SHAPE_RE.search(lhs_type)
+    cm = _CONTRACT_RE.search(inst.line)
+    contract = 1
+    if lm and cm and lm.group(2):
+        lhs_dims = [int(d) for d in lm.group(2).split(",")]
+        for ci in (cm.group(1).split(",") if cm.group(1) else []):
+            contract *= lhs_dims[int(ci)]
+    return 2.0 * res_elems * contract
+
+
+def _trip_count(cond_block: _Block | None) -> int | None:
+    """Canonical scan loop condition: compare(induction, constant), LT."""
+    if cond_block is None:
+        return None
+    consts: list[int] = []
+    for inst in cond_block.instrs:
+        if inst.opcode == "constant":
+            mm = re.search(r"constant\((-?\d+)\)", inst.line)
+            if mm:
+                consts.append(int(mm.group(1)))
+    for inst in cond_block.instrs:
+        if inst.opcode == "compare" and "LT" in inst.line and consts:
+            return max(consts)
+    return max(consts) if consts else None
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    hbm_bytes_hi: float = 0.0
+    collective_bytes: float = 0.0
+    collective_counts: dict = dataclasses.field(default_factory=dict)
+    unknown_loops: int = 0
+
+    def add(self, other: "HloCost", scale: float = 1.0) -> None:
+        self.flops += scale * other.flops
+        self.hbm_bytes += scale * other.hbm_bytes
+        self.hbm_bytes_hi += scale * other.hbm_bytes_hi
+        self.collective_bytes += scale * other.collective_bytes
+        for k, v in other.collective_counts.items():
+            e = self.collective_counts.setdefault(k, {"count": 0, "bytes": 0.0})
+            e["count"] += scale * v["count"]
+            e["bytes"] += scale * v["bytes"]
+        self.unknown_loops += other.unknown_loops
+
+
+_CALL_NAME_RE = {attr: re.compile(re.escape(attr) + r"(%[\w.\-]+)")
+                 for attr in _CALL_ATTRS}
+
+
+def analyze(text: str) -> HloCost:
+    blocks = parse_blocks(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.search(r"ENTRY\s+(%[\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:            # fall back: last block
+        entry = list(blocks)[-1] if blocks else None
+    memo: dict[str, HloCost] = {}
+
+    def block_cost(name: str, stack: frozenset[str]) -> HloCost:
+        if name in memo:
+            return memo[name]
+        if name not in blocks or name in stack:
+            return HloCost()
+        blk = blocks[name]
+        total = HloCost()
+        sub_stack = stack | {name}
+        for inst in blk.instrs:
+            if inst.opcode == "while":
+                body = _CALL_NAME_RE["body="].search(inst.line)
+                cond = _CALL_NAME_RE["condition="].search(inst.line)
+                trips = _trip_count(blocks.get(cond.group(1)) if cond else None)
+                if trips is None:
+                    trips = 1
+                    total.unknown_loops += 1
+                if body:
+                    total.add(block_cost(body.group(1), sub_stack), trips)
+                if cond:
+                    total.add(block_cost(cond.group(1), sub_stack), trips)
+                continue
+            if inst.opcode in ("fusion", "call", "conditional", "map",
+                               "reduce", "reduce-window", "sort", "scatter",
+                               "select-and-scatter", "custom-call"):
+                for attr in ("calls=", "to_apply=", "true_computation=",
+                             "false_computation="):
+                    for m in _CALL_NAME_RE[attr].finditer(inst.line):
+                        sub = block_cost(m.group(1), sub_stack)
+                        # fused computations: count their dot flops, but their
+                        # memory traffic is the fusion's operands+result
+                        inner = HloCost(flops=sub.flops,
+                                        collective_bytes=sub.collective_bytes,
+                                        collective_counts=sub.collective_counts)
+                        total.add(inner)
+            # per-instruction metrics
+            if inst.opcode == "dot":
+                total.flops += _dot_flops(inst, blk)
+            base = inst.opcode.replace("-start", "")
+            if base in _COLLECTIVES and not inst.opcode.endswith("-done"):
+                b = sum(_shape_elems_bytes(blk.types.get(op, ""))[1]
+                        for op in inst.operands)
+                if b == 0:
+                    b = _shape_elems_bytes(inst.result_type)[1]
+                total.collective_bytes += b
+                e = total.collective_counts.setdefault(
+                    base, {"count": 0, "bytes": 0.0})
+                e["count"] += 1
+                e["bytes"] += b
+            if (inst.opcode.replace("-start", "") in _MATERIALIZING
+                    and not inst.opcode.endswith("-done")):
+                rb = _shape_elems_bytes(inst.result_type)[1]
+                if inst.opcode in ("dynamic-slice", "gather"):
+                    # reads only the sliced/gathered bytes, not the operand
+                    total.hbm_bytes += 2 * rb
+                elif inst.opcode in ("dynamic-update-slice", "scatter"):
+                    # in-place update: read+write of the update slice only
+                    ub = _shape_elems_bytes(
+                        blk.types.get(inst.operands[1], "")
+                        if len(inst.operands) > 1 else "")[1]
+                    total.hbm_bytes += 2 * ub
+                else:
+                    ob = sum(_shape_elems_bytes(blk.types.get(op, ""))[1]
+                             for op in inst.operands)
+                    total.hbm_bytes += rb + ob
+            if inst.opcode == "fusion":
+                rb = _shape_elems_bytes(inst.result_type)[1]
+                ob = sum(_shape_elems_bytes(blk.types.get(op, ""))[1]
+                         for op in inst.operands)
+                total.hbm_bytes_hi += rb + ob
+        memo[name] = total
+        return total
+
+    if entry is None:
+        return HloCost()
+    out = block_cost(entry, frozenset())
+    out.hbm_bytes_hi += out.hbm_bytes
+    return out

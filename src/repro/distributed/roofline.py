@@ -1,0 +1,62 @@
+"""Three-term roofline from compiled dry-run artifacts (TPU v5e target).
+
+    compute    = HLO_FLOPs        / (chips × 197 TFLOP/s)
+    memory     = HLO_bytes        / (chips × 819 GB/s)
+    collective = collective_bytes / (chips × 50 GB/s/link)
+
+``cost_analysis`` on a GSPMD-partitioned module reports the *per-device*
+program; we normalize everything to per-device terms (equivalent to the
+global/chips formula).  MODEL_FLOPS uses 6·N·D (dense) or 6·N_active·D (MoE)
+with D = tokens processed, and the MODEL/HLO ratio flags remat or dispatch
+waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops_global: float
+    useful_ratio: float
+    bottleneck: str
+    step_s: float           # max of the three (perfect-overlap bound)
+    roofline_fraction: float  # compute_s / step_s (how compute-bound we are)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def analyze(*, flops_per_device: float, bytes_per_device: float,
+            collective_bytes_per_device: float, n_devices: int,
+            model_flops: float) -> Roofline:
+    compute_s = flops_per_device / PEAK_FLOPS
+    memory_s = bytes_per_device / HBM_BW
+    collective_s = collective_bytes_per_device / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    step = max(terms.values())
+    hlo_global = flops_per_device * n_devices
+    return Roofline(
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        model_flops=model_flops, hlo_flops_global=hlo_global,
+        useful_ratio=(model_flops / hlo_global if hlo_global else 0.0),
+        bottleneck=bottleneck, step_s=step,
+        roofline_fraction=(compute_s / step if step else 0.0))
+
+
+def model_flops_estimate(n_params_active: float, tokens: float,
+                         kind: str) -> float:
+    """6·N·D for training, 2·N·D for inference forward (prefill/decode)."""
+    if kind == "train":
+        return 6.0 * n_params_active * tokens
+    return 2.0 * n_params_active * tokens

@@ -1,0 +1,53 @@
+"""Pallas TPU kernel: LB_Keogh — per-candidate DTW lower bound.
+
+After node-level pruning (``lb_isax`` on envelope summaries), DTW exact
+search still pays O(n·band) per surviving candidate.  LB_Keogh orders and
+prunes candidates first:
+
+    LB(q, x) = sqrt( Σ_i  max(0, x_i − U_i, L_i − x_i)² )   ≤ DTW(q, x)
+
+with (U, L) the query's upper/lower envelope over the warping band.  Pure
+VPU elementwise + row reduction over a ``(block_b, n)`` tile — the same
+memory-bound profile as ``lb_isax`` but at full resolution.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, u_ref, l_ref, o_ref):
+    x = x_ref[...]                   # (TB, n)
+    U = u_ref[...]                   # (1, n)
+    L = l_ref[...]
+    above = jnp.maximum(x - U, 0.0)
+    below = jnp.maximum(L - x, 0.0)
+    d = jnp.maximum(above, below)
+    o_ref[...] = (d * d).sum(axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def lb_keogh(x: jax.Array, U: jax.Array, L: jax.Array, *, block_b: int = 256,
+             interpret: bool = True) -> jax.Array:
+    """``x [B, n]`` candidates, ``U/L [n]`` query envelope → squared LB [B]."""
+    B, n = x.shape
+    Bp = -(-B // block_b) * block_b
+    xp = jnp.pad(x.astype(jnp.float32), ((0, Bp - B), (0, 0)))
+    Up = U.astype(jnp.float32)[None, :]
+    Lp = L.astype(jnp.float32)[None, :]
+    out = pl.pallas_call(
+        _kernel,
+        grid=(Bp // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, 1), jnp.float32),
+        interpret=interpret,
+    )(xp, Up, Lp)
+    return out[:B, 0]

@@ -1,0 +1,47 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernel bodies execute in Python for correctness validation) and False on a
+real TPU backend.  Callers never pass it explicitly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import lb_isax as _lb
+from . import lb_keogh as _lbk
+from . import pairwise_l2 as _pl2
+from . import sax_encode as _se
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def sax_encode(x: jax.Array, w: int, b: int) -> tuple[jax.Array, jax.Array]:
+    """Fused PAA+SAX (Stage 1 of Algorithm 1).  ``[B, n] → (f32 [B,w], i32 [B,w])``."""
+    return _se.sax_encode(x, w=w, b=b, interpret=_interpret())
+
+
+def pairwise_l2(q: jax.Array, x: jax.Array) -> jax.Array:
+    """Squared distance matrix ``[Q, X]`` (candidate verification)."""
+    return _pl2.pairwise_l2(q, x, interpret=_interpret())
+
+
+def lb_isax(paa_q: jax.Array, lo: jax.Array, hi: jax.Array, n: int) -> jax.Array:
+    """Squared MINDIST to every leaf pack ``[Q, L]`` (pruning scan)."""
+    return _lb.lb_isax(paa_q, lo, hi, n=n, interpret=_interpret())
+
+
+def lb_keogh(x: jax.Array, U: jax.Array, L: jax.Array) -> jax.Array:
+    """Squared LB_Keogh per candidate (DTW pre-filter)."""
+    return _lbk.lb_keogh(x, U, L, interpret=_interpret())
+
+
+def knn_from_leaves(q: jax.Array, db_ordered: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Top-k over a contiguous candidate slab: distances via the Pallas
+    kernel, selection via ``lax.top_k``.  Returns (ordered-position ids, d2)."""
+    d2 = pairwise_l2(q[None, :], db_ordered)[0]
+    neg, idx = jax.lax.top_k(-d2, min(k, d2.shape[0]))
+    return idx, -neg

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Each function is the mathematical specification its kernel must match
+(``tests/test_kernels.py`` sweeps shapes/dtypes and asserts allclose).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.sax import breakpoints
+
+
+def sax_encode_ref(x: jax.Array, w: int, b: int) -> tuple[jax.Array, jax.Array]:
+    """PAA + SAX symbolization.  ``x [B, n] -> (paa [B, w] f32, sax [B, w] i32)``."""
+    x = x.astype(jnp.float32)
+    n = x.shape[-1]
+    paa = x.reshape(*x.shape[:-1], w, n // w).mean(axis=-1)
+    bp = jnp.asarray(breakpoints(b), jnp.float32)
+    sax = jnp.searchsorted(bp, paa, side="right").astype(jnp.int32)
+    return paa, sax
+
+
+def pairwise_l2_ref(q: jax.Array, x: jax.Array) -> jax.Array:
+    """Squared L2: ``q [Q, n]``, ``x [X, n]`` → ``[Q, X] f32``."""
+    q = q.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    qn = (q * q).sum(-1, keepdims=True)
+    xn = (x * x).sum(-1)[None, :]
+    return jnp.maximum(qn + xn - 2.0 * (q @ x.T), 0.0)
+
+
+def lb_isax_ref(paa_q: jax.Array, lo: jax.Array, hi: jax.Array, n: int) -> jax.Array:
+    """Squared MINDIST(PAA, region): ``paa_q [Q, w]``, ``lo/hi [L, w]`` →
+    ``[Q, L] f32`` (scaled by n/w)."""
+    w = paa_q.shape[-1]
+    below = jnp.maximum(lo[None, :, :] - paa_q[:, None, :], 0.0)
+    above = jnp.maximum(paa_q[:, None, :] - hi[None, :, :], 0.0)
+    d = jnp.maximum(below, above)
+    return (n / w) * (d * d).sum(-1)
+
+
+def lb_keogh_ref(x: jax.Array, U: jax.Array, L: jax.Array) -> jax.Array:
+    """Squared LB_Keogh: ``x [B, n]``, envelope ``U/L [n]`` → ``[B] f32``."""
+    x = x.astype(jnp.float32)
+    above = jnp.maximum(x - U[None, :].astype(jnp.float32), 0.0)
+    below = jnp.maximum(L[None, :].astype(jnp.float32) - x, 0.0)
+    d = jnp.maximum(above, below)
+    return (d * d).sum(-1)

@@ -1,0 +1,314 @@
+"""Multi-pod dry-run: lower + compile every (architecture × input shape ×
+mesh) cell with production shardings; record memory analysis, cost analysis
+and the collective schedule for §Dry-run / §Roofline.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both
+
+Artifacts: artifacts/dryrun/<arch>__<shape>__<mesh>.json
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Everything below is ordinary code.
+
+import argparse
+import json
+import time
+import traceback
+
+import numpy as np
+import jax
+
+from repro.configs.base import SHAPES, cell_applicable
+from repro.distributed import hlo_analysis, hlo_cost, roofline
+from repro.distributed.sharding import (DEFAULT_RULES, logical_rules,
+                                        shardings_for)
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry, transformer as tfm
+from repro.models.common import logical_tree
+from repro.train import optimizer as opt
+from repro.train.train_step import (make_microbatched_train_step,
+                                    make_train_step)
+
+
+def rules_for(cfg, shape, mesh) -> dict:
+    rules = dict(DEFAULT_RULES)
+    # drop batch sharding when the global batch doesn't divide the dp axes
+    dp = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            dp *= mesh.shape[ax]
+    if shape.global_batch % dp != 0:
+        if shape.global_batch % mesh.shape.get("data", 1) == 0:
+            rules["batch"] = "data"
+        else:
+            rules["batch"] = None
+    if shape.kind == "decode":
+        # serving sharding split (§Perf iteration): FSDP re-gathers every
+        # parameter per decoded token; when the TP-sharded weights fit in
+        # ~half the HBM, replicate them across the dp axes instead — the
+        # per-token weight collectives disappear entirely.
+        from repro.models import transformer as _tfm
+        param_gib = (_tfm.count_params(cfg) * 2) / mesh.shape["model"] / 2**30
+        if param_gib <= 8.0:
+            rules["embed_fsdp"] = None
+    return rules
+
+
+def count_params_split(cfg) -> tuple[float, float]:
+    """(total, active) parameter counts; active discounts unrouted experts."""
+    from repro.models.common import PSpec
+    specs = tfm.init_specs(cfg)
+    total = active = 0.0
+    flat = jax.tree.flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, PSpec))[0]
+    for path, spec in flat:
+        n = float(np.prod(spec.shape))
+        total += n
+        keys = "/".join(str(getattr(p, "key", p)) for p in path)
+        if cfg.moe and "/moe/" in f"/{keys}/" and any(
+                k in keys for k in ("w_gate", "w_up", "w_down")) and \
+                "sh_" not in keys:
+            n = n * cfg.moe.top_k / cfg.moe.n_experts
+        active += n
+    return total, active
+
+
+def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+               donate: bool = True):
+    cfg = registry.get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "skipped": why}
+
+    rules = rules_for(cfg, shape, mesh)
+    with logical_rules(mesh, rules):
+        params_abs = tfm.abstract_params(cfg)
+        params_log = logical_tree(tfm.init_specs(cfg))
+        params_sh = shardings_for(params_abs, params_log)
+        batch_abs = registry.input_specs(cfg, shape)
+        batch_sh = shardings_for(batch_abs, registry.batch_logical(cfg, shape))
+
+        if shape.kind == "train":
+            ocfg = opt.AdamWConfig(
+                moment_dtype=cfg.moment_dtype,
+                # big-model memory mode: bf16 accumulation travels with
+                # bf16 moments (llama3-405b — DESIGN.md §5)
+                accum_dtype=("bfloat16" if cfg.moment_dtype == "bfloat16"
+                             else "float32"),
+                math_dtype=("bfloat16" if cfg.moment_dtype == "bfloat16"
+                            else "float32"))
+            if cfg.grad_accum > 1:
+                step_fn = make_microbatched_train_step(cfg, ocfg,
+                                                       cfg.grad_accum)
+            else:
+                step_fn = make_train_step(cfg, ocfg)
+            opt_abs = opt.abstract_state(params_abs, ocfg)
+            opt_sh = shardings_for(opt_abs, opt.state_logical(params_log))
+            jitted = jax.jit(step_fn,
+                             in_shardings=(params_sh, opt_sh, batch_sh),
+                             out_shardings=(params_sh, opt_sh, None),
+                             donate_argnums=(0, 1) if donate else ())
+            args = (params_abs, opt_abs, batch_abs)
+        elif shape.kind == "prefill":
+            step_fn = registry.make_prefill_step(cfg)
+            jitted = jax.jit(step_fn, in_shardings=(params_sh, batch_sh))
+            args = (params_abs, batch_abs)
+        else:  # decode
+            step_fn = registry.make_decode_step(cfg)
+            jitted = jax.jit(step_fn, in_shardings=(params_sh, batch_sh),
+                             donate_argnums=(1,) if donate else ())
+            args = (params_abs, batch_abs)
+
+        t0 = time.time()
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        census = hlo_analysis.op_census(hlo)
+        # loop-aware static analysis: XLA's cost_analysis counts while bodies
+        # once; repro.distributed.hlo_cost scales by trip counts.
+        t0 = time.time()
+        lc = hlo_cost.analyze(hlo)
+        t_analyze = time.time() - t0
+
+    n_dev = mesh.size
+    total_p, active_p = count_params_split(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mf = roofline.model_flops_estimate(
+        active_p, tokens, "train" if shape.kind == "train" else "infer")
+    rl = roofline.analyze(
+        flops_per_device=lc.flops,
+        bytes_per_device=lc.hbm_bytes,
+        collective_bytes_per_device=lc.collective_bytes,
+        n_devices=n_dev, model_flops=mf)
+
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "n_devices": n_dev,
+        "params_total": total_p, "params_active": active_p,
+        "tokens_per_step": tokens,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_per_device": (mem.argument_size_in_bytes +
+                                mem.output_size_in_bytes +
+                                mem.temp_size_in_bytes -
+                                mem.alias_size_in_bytes),
+        },
+        "cost_xla_raw": {k: cost[k] for k in ("flops", "bytes accessed")
+                         if k in cost},
+        "cost": {"flops_per_device": lc.flops,
+                 "hbm_bytes_per_device": lc.hbm_bytes,
+                 "hbm_bytes_pessimistic": lc.hbm_bytes_hi,
+                 "collective_bytes_per_device": lc.collective_bytes,
+                 "unknown_loops": lc.unknown_loops,
+                 "analyze_s": round(t_analyze, 1)},
+        "collectives": {"per_kind": lc.collective_counts,
+                        "total_bytes": lc.collective_bytes},
+        "op_census": census,
+        "roofline": rl.as_dict(),
+    }
+
+
+def lower_dumpy_cell(mesh, mesh_name: str, kind: str) -> dict:
+    """The paper's own technique on the production mesh: distributed index
+    build (Stage 1 + root histogram) and one-shot sharded search."""
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.distributed import build_step, search_step
+    from repro.distributed.sharding import logical_rules
+
+    w, b = 16, 8
+    n_series, length = 1 << 22, 256          # 4M × 256 f32 = 4 GB collection
+    db_abs = jax.ShapeDtypeStruct((n_series, length), jnp.float32)
+    dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    sh = NamedSharding(mesh, P(dp, None))
+    with logical_rules(mesh):
+        if kind == "build":
+            jitted = jax.jit(build_step, static_argnums=(1, 2),
+                             in_shardings=(sh,))
+            t0 = time.time()
+            lowered = jitted.lower(db_abs, w, b)
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+        else:
+            L = 16384
+            q_abs = jax.ShapeDtypeStruct((64, length), jnp.float32)
+            lo_abs = jax.ShapeDtypeStruct((L, w), jnp.float32)
+            jitted = jax.jit(search_step, static_argnums=(4,),
+                             in_shardings=(None, sh, None, None))
+            t0 = time.time()
+            lowered = jitted.lower(q_abs, db_abs, lo_abs, lo_abs, 50)
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    lc = hlo_cost.analyze(hlo)
+    # model flops: build = PAA matmul 2·N·n·w; search = distance matmul 2·Q·N·n
+    mf = (2.0 * n_series * length * w if kind == "build"
+          else 2.0 * 64 * n_series * length)
+    rl = roofline.analyze(flops_per_device=lc.flops,
+                          bytes_per_device=lc.hbm_bytes,
+                          collective_bytes_per_device=lc.collective_bytes,
+                          n_devices=mesh.size, model_flops=mf)
+    return {"arch": f"dumpy-{kind}", "shape": "n4M_len256", "mesh": mesh_name,
+            "n_devices": mesh.size, "compile_s": round(t_compile, 1),
+            "memory": {"argument_bytes": mem.argument_size_in_bytes,
+                       "output_bytes": mem.output_size_in_bytes,
+                       "temp_bytes": mem.temp_size_in_bytes,
+                       "alias_bytes": mem.alias_size_in_bytes,
+                       "peak_per_device": (mem.argument_size_in_bytes +
+                                           mem.output_size_in_bytes +
+                                           mem.temp_size_in_bytes -
+                                           mem.alias_size_in_bytes)},
+            "cost": {"flops_per_device": lc.flops,
+                     "hbm_bytes_per_device": lc.hbm_bytes,
+                     "collective_bytes_per_device": lc.collective_bytes},
+            "collectives": {"per_kind": lc.collective_counts,
+                            "total_bytes": lc.collective_bytes},
+            "roofline": rl.as_dict()}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    if args.arch == "dumpy":
+        for multi in {"single": [False], "multi": [True],
+                      "both": [False, True]}[args.mesh]:
+            mesh_name = "multi_pod_2x16x16" if multi else "pod_16x16"
+            mesh = make_production_mesh(multi_pod=multi)
+            for kind in ("build", "search"):
+                rec = lower_dumpy_cell(mesh, mesh_name, kind)
+                path = os.path.join(args.out, f"dumpy-{kind}__{mesh_name}.json")
+                os.makedirs(args.out, exist_ok=True)
+                with open(path, "w") as fh:
+                    json.dump(rec, fh, indent=1)
+                r = rec["roofline"]
+                print(f"[dumpy-{kind} {mesh_name}] compile={rec['compile_s']}s "
+                      f"mem/dev={rec['memory']['peak_per_device']/2**30:.2f}GiB "
+                      f"terms(c/m/x)={r['compute_s']:.3g}/{r['memory_s']:.3g}/"
+                      f"{r['collective_s']:.3g}s bottleneck={r['bottleneck']}")
+        return
+
+    archs = registry.ARCH_NAMES if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for multi in meshes:
+        mesh_name = "multi_pod_2x16x16" if multi else "pod_16x16"
+        mesh = make_production_mesh(multi_pod=multi)
+        for arch in archs:
+            for shape in shapes:
+                tag = f"{arch}__{shape}__{mesh_name}"
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip] {tag}")
+                    continue
+                print(f"[cell] {tag} ...", flush=True)
+                try:
+                    rec = lower_cell(arch, shape, mesh, mesh_name)
+                except Exception as e:  # noqa: BLE001 — report, keep sweeping
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                    failures += 1
+                with open(path, "w") as fh:
+                    json.dump(rec, fh, indent=1)
+                if "error" in rec:
+                    print(f"  FAILED: {rec['error'].splitlines()[0]}")
+                elif "skipped" in rec:
+                    print(f"  skipped: {rec['skipped']}")
+                else:
+                    r = rec["roofline"]
+                    print(f"  ok compile={rec['compile_s']}s "
+                          f"mem/dev={rec['memory']['peak_per_device']/2**30:.2f}GiB "
+                          f"bottleneck={r['bottleneck']} "
+                          f"terms(c/m/x)={r['compute_s']:.3g}/"
+                          f"{r['memory_s']:.3g}/{r['collective_s']:.3g}s",
+                          flush=True)
+    print(f"done; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

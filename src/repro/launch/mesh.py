@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level state) so importing never touches jax device
+initialization — the dry-run must set XLA_FLAGS before first jax use.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """Whatever devices exist (1 on this CPU container; elastic by design —
+    the same code path rebuilds the mesh from the live device count)."""
+    n = len(jax.devices())
+    if n >= 256:
+        return make_production_mesh()
+    # degenerate data×model factorization for small device counts
+    model = 1
+    for m in (16, 8, 4, 2, 1):
+        if n % m == 0:
+            model = m
+            break
+    return jax.make_mesh((n // model, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,114 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --preset smoke
+    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --preset 100m \
+        --steps 300 --batch 8 --seq 512
+
+Presets:
+  smoke — reduced config (CPU-friendly, seconds)
+  100m  — ~100M-parameter same-family config (the assignment's end-to-end
+          driver scale; hours on CPU, minutes on real accelerators)
+  full  — the assigned architecture as specified (needs the real pod)
+
+Fault tolerance is live here: kill -TERM mid-run → checkpoint → rerun with
+the same --ckpt-dir resumes where it left off.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs.base import reduced
+from repro.data.tokens import TokenPipeline, TokenPipelineConfig
+from repro.distributed.sharding import DEFAULT_RULES, logical_rules, shardings_for
+from repro.launch.mesh import make_host_mesh
+from repro.models import registry, transformer as tfm
+from repro.models.common import logical_tree
+from repro.train import optimizer as opt
+from repro.train.train_step import make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def preset_config(arch: str, preset: str):
+    cfg = registry.get_config(arch)
+    if preset == "full":
+        return cfg
+    if preset == "smoke":
+        return reduced(cfg)
+    if preset == "100m":
+        # ~100M same-family: scale width/depth down, keep the block pattern
+        pat = len(cfg.block_pattern)
+        return dataclasses.replace(
+            reduced(cfg), n_layers=max(8 // pat, 1) * pat, d_model=512,
+            n_heads=8, n_kv_heads=min(cfg.n_kv_heads, 8) or 1, head_dim=64,
+            d_ff=2048 if cfg.d_ff else 0, vocab=32_768,
+            rnn_dim=512 if cfg.rnn_dim else 0)
+    raise ValueError(preset)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--preset", default="smoke",
+                    choices=["smoke", "100m", "full"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="checkpoints/train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = preset_config(args.arch, args.preset)
+    mesh = make_host_mesh()
+    print(f"arch={cfg.name} preset={args.preset} "
+          f"params={tfm.count_params(cfg)/1e6:.1f}M mesh={dict(mesh.shape)}")
+
+    pipe = TokenPipeline(TokenPipelineConfig(
+        vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch))
+
+    def data_fn(step: int) -> dict:
+        batch = pipe.batch_at(step)
+        extra = {}
+        if cfg.family == "encdec":
+            extra["frames"] = np.zeros((args.batch, cfg.encoder_seq,
+                                        cfg.d_model), np.float32)
+        if cfg.family == "vlm":
+            extra["patches"] = np.zeros((args.batch, cfg.vision_tokens,
+                                         cfg.d_model), np.float32)
+        return {**batch, **extra}
+
+    with logical_rules(mesh, DEFAULT_RULES):
+        params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+        ocfg = opt.AdamWConfig(lr=args.lr, total_steps=args.steps,
+                               warmup_steps=max(args.steps // 20, 5),
+                               moment_dtype=cfg.moment_dtype)
+        opt_state = opt.init(params, ocfg)
+
+        def sharding_fn(tree):
+            abs_tree = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(np.shape(x), x.dtype), tree)
+            logical = (logical_tree(tfm.init_specs(cfg)),
+                       opt.state_logical(logical_tree(tfm.init_specs(cfg))))
+            return shardings_for(abs_tree, logical)
+
+        trainer = Trainer(
+            TrainerConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                          ckpt_dir=args.ckpt_dir),
+            make_train_step(cfg, ocfg), data_fn, sharding_fn)
+        params, opt_state, report = trainer.run(params, opt_state)
+
+    if report.losses:
+        k = max(len(report.losses) // 10, 1)
+        print(f"done: steps={report.steps_run} "
+              f"loss {np.mean(report.losses[:k]):.3f} → "
+              f"{np.mean(report.losses[-k:]):.3f} "
+              f"resumed_from={report.resumed_from} "
+              f"stragglers={len(report.straggler_events)}")
+
+
+if __name__ == "__main__":
+    main()

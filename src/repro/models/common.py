@@ -1,0 +1,250 @@
+"""Shared model building blocks (pure JAX, functional).
+
+Parameters are described by ``PSpec`` trees (shape + logical axes + init);
+``materialize`` turns a spec tree into real arrays (smoke tests / training)
+while ``abstract`` turns it into ShapeDtypeStructs (dry-run lowering — no
+allocation).  Every activation is annotated with logical axes via
+``repro.distributed.sharding.shard`` so the same code lowers correctly on the
+production meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]
+    init: str = "normal"       # 'normal' | 'zeros' | 'ones' | 'rglru_lambda'
+    scale: float | None = None  # stddev override (default 1/sqrt(fan_in))
+    dtype: str | None = None   # per-leaf override (e.g. f32 recurrent states)
+
+
+def is_pspec(x: Any) -> bool:
+    return isinstance(x, PSpec)
+
+
+def materialize(tree: Any, rng: jax.Array, dtype: jnp.dtype) -> Any:
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_pspec)
+    keys = jax.random.split(rng, len(leaves))
+
+    def init_one(spec: PSpec, key):
+        dt = jnp.dtype(spec.dtype) if spec.dtype else dtype
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dt)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dt)
+        if spec.init == "rglru_lambda":   # a = sigmoid(Λ) ∈ (0.9, 0.999)
+            u = jax.random.uniform(key, spec.shape, jnp.float32, 0.9, 0.999)
+            return jnp.log(u / (1 - u)).astype(dt)
+        scale = spec.scale if spec.scale is not None else \
+            1.0 / np.sqrt(max(spec.shape[0] if len(spec.shape) > 1 else spec.shape[-1], 1))
+        return (scale * jax.random.normal(key, spec.shape, jnp.float32)).astype(dt)
+
+    return jax.tree.unflatten(treedef, [init_one(s, k) for s, k in zip(leaves, keys)])
+
+
+def abstract(tree: Any, dtype: jnp.dtype) -> Any:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.dtype(s.dtype) if s.dtype else dtype),
+        tree, is_leaf=is_pspec)
+
+
+def logical_tree(tree: Any) -> Any:
+    return jax.tree.map(lambda s: s.logical, tree, is_leaf=is_pspec)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array | None, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt((x32 * x32).mean(-1, keepdims=True) + eps)
+    if scale is not None:
+        y = y * (1.0 + scale.astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def layer_norm_nonparam(x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """OLMo's non-parametric LayerNorm (no scale/bias)."""
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def norm(x: jax.Array, scale: jax.Array | None, nonparam: bool) -> jax.Array:
+    return layer_norm_nonparam(x) if nonparam else rms_norm(x, scale)
+
+
+# ---------------------------------------------------------------------------
+# rotary / sinusoidal positions
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """``x [..., S, H, D]``, ``pos [S] or [B, S]`` — rotate pairs."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos[..., None].astype(jnp.float32) * freqs          # [..., S, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if ang.ndim == 2:                                         # [S, half]
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:                                                     # [B, S, half]
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal(seq: int, d: int) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10_000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention (full / causal / local / cached decode) with chunked softmax
+# ---------------------------------------------------------------------------
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """[B, S, KV, D] → [B, S, KV*n_rep, D] (GQA broadcast)."""
+    if n_rep == 1:
+        return k
+    b, s, kv, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, n_rep, d)
+                            ).reshape(b, s, kv * n_rep, d)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
+              window: int = 0, chunk: int = 1024,
+              q_offset: int | jax.Array = 0) -> jax.Array:
+    """Chunked online-softmax attention (flash-style, pure JAX).
+
+    ``q [B, Sq, H, D]``; ``k/v [B, Sk, KV, D]`` (GQA broadcast inside).
+    Scans over KV chunks carrying (max, denom, acc) so the [Sq, Sk] logits
+    matrix is never materialized — required for the 32k prefill cells and the
+    honest memory roofline.  ``window > 0`` adds a local-attention band.
+    """
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    k = _repeat_kv(k, h // kv)
+    v = _repeat_kv(v, h // kv)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "heads", None)
+    v = shard(v, "batch", "seq", "heads", None)
+    scale = 1.0 / np.sqrt(d)
+    chunk = min(chunk, sk)
+    n_chunks = -(-sk // chunk)
+    pad = n_chunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, h, d).transpose(1, 0, 2, 3, 4)
+
+    q32 = (q * scale).astype(jnp.float32)
+    qpos = jnp.arange(sq) + q_offset                       # absolute positions
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kb, vb, ci = xs                                    # [B, C, H, D], idx
+        kpos = ci * chunk + jnp.arange(chunk)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q32.astype(kb.dtype), kb,
+                            preferred_element_type=jnp.float32)
+        logits = shard(logits, "batch", "heads", None, None)
+        mask = jnp.ones((sq, chunk), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window:
+            mask &= qpos[:, None] - kpos[None, :] < window
+        mask &= (kpos < sk)[None, :]                       # padding
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(-1))
+        # probabilities in bf16 for the PV matmul (values ≤ 1; f32 accumulate)
+        p = jnp.exp(logits - m_new[..., None]).astype(jnp.bfloat16)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.astype(jnp.float32).sum(-1)
+        pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(vb.dtype), vb,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((b, h, sq), -jnp.inf, jnp.float32),
+            jnp.zeros((b, h, sq), jnp.float32),
+            jnp.zeros((b, h, sq, d), jnp.float32))
+    # checkpoint per chunk: the backward pass recomputes each chunk's logits
+    # instead of saving [B,H,Sq,chunk] residuals per step
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(step), init,
+                                  (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)       # [B, Sq, H, D]
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array) -> jax.Array:
+    """One-token attention over a full cache.  ``q [B, 1, H, D]``,
+    caches ``[B, S, KV, D]`` with valid entries < pos.
+
+    Flash-decoding sharding: the cache stays sequence-sharded
+    (``cache_seq → model``); the tiny q replicates; logits keep the sharded
+    S axis so the softmax reduction and the PV contraction become partial
+    results combined by GSPMD collectives of [B,H]-sized scalars — *without
+    ever gathering the cache* (the naive resolution all-gathered 1 GiB/layer
+    on qwen3-decode; EXPERIMENTS.md §Perf)."""
+    b, _, h, d = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    k = _repeat_kv(k_cache, h // kv)
+    v = _repeat_kv(v_cache, h // kv)
+    k = shard(k, "batch", "cache_seq", None, None)
+    v = shard(v, "batch", "cache_seq", None, None)
+    q = shard(q, "batch", None, None, None)      # replicate over model
+    scale = 1.0 / np.sqrt(d)
+    # no .astype(f32) on the cache: a per-layer convert of the scanned cache
+    # makes XLA materialize + carry a whole-stack f32 copy (2x cache memory,
+    # observed on qwen3 decode — §Perf); mixed-precision accumulate instead
+    logits = jnp.einsum("bqhd,bkhd->bhqk", (q * scale).astype(k.dtype), k,
+                        preferred_element_type=jnp.float32)
+    logits = shard(logits, "batch", None, None, "cache_seq")
+    valid = (jnp.arange(s) <= pos)[None, None, None, :]
+    logits = jnp.where(valid, logits, -1e30)
+    # explicit max/exp/sum so the sharded-axis reductions stay tiny
+    m = logits.max(axis=-1, keepdims=True)       # [B,H,1,1] (psum-combined)
+    p = jnp.exp(logits - m)
+    denom = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(k.dtype), v,
+                     preferred_element_type=jnp.float32)
+    out = out / denom.transpose(0, 2, 1, 3)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("bsd,df->bsf", x, w_gate)
+    u = jnp.einsum("bsd,df->bsf", x, w_up)
+    h = jax.nn.silu(g) * u
+    h = shard(h, "batch", "seq", "mlp")
+    return jnp.einsum("bsf,fd->bsd", h, w_down)
+
+
+def gelu_mlp(x: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, w_up))
+    h = shard(h, "batch", "seq", "mlp")
+    return jnp.einsum("bsf,fd->bsd", h, w_down)

@@ -1,0 +1,118 @@
+"""Griffin / RecurrentGemma blocks (arXiv:2402.19427): RG-LRU recurrent
+block with temporal conv, and local (sliding-window MQA) attention.
+
+* Prefill/train runs the linear recurrence ``h_t = a_t h_{t-1} + b_t`` via
+  ``jax.lax.associative_scan`` (log-depth — TPU-friendly).
+* Decode carries ``(h, conv buffer)`` — constant-size state, which is why
+  this arch runs the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from .common import PSpec, rms_norm
+
+RGLRU_C = 8.0
+
+
+def rglru_specs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    r = cfg.rnn_dim or d
+    cw = cfg.conv_width
+    return {
+        "norm": PSpec((d,), (None,), "zeros"),
+        "w_in": PSpec((d, r), ("embed_fsdp", "mlp")),       # recurrent branch
+        "w_gate_br": PSpec((d, r), ("embed_fsdp", "mlp")),  # GeLU gate branch
+        "conv_w": PSpec((cw, r), (None, "mlp"), scale=0.5),
+        "conv_b": PSpec((r,), ("mlp",), "zeros"),
+        "w_a": PSpec((r, r), (None, "mlp")),                # recurrence gate
+        "w_x": PSpec((r, r), (None, "mlp")),                # input gate
+        "lam": PSpec((r,), ("mlp",), "rglru_lambda"),
+        "w_out": PSpec((r, d), ("mlp", "embed_fsdp")),
+    }
+
+
+def rglru_state_specs(cfg: ArchConfig, batch: int) -> dict:
+    r = cfg.rnn_dim or cfg.d_model
+    cw = cfg.conv_width
+    return {"h": PSpec((batch, r), ("batch", "state"), "zeros", dtype="float32"),
+            "conv": PSpec((batch, cw - 1, r), ("batch", None, "state"), "zeros", dtype="float32")}
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 buf: jax.Array | None) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv over seq via stacked shifts.  ``x [B, S, R]``,
+    ``w [CW, R]``.  Returns (y, new buffer of last CW−1 inputs)."""
+    cw = w.shape[0]
+    if buf is None:
+        ctx = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        ctx = jnp.concatenate([buf.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    y = jnp.zeros_like(x)
+    for i in range(cw):
+        y = y + ctx[:, i:i + S, :] * w[cw - 1 - i][None, None, :]
+    y = y + b[None, None, :]
+    new_buf = ctx[:, -(cw - 1):, :]
+    return y, new_buf
+
+
+def _gates(p: dict, xr: jax.Array):
+    dtype = xr.dtype
+    rgate = jax.nn.sigmoid(jnp.einsum("bsr,rk->bsk", xr, p["w_a"].astype(dtype))
+                           .astype(jnp.float32))
+    igate = jax.nn.sigmoid(jnp.einsum("bsr,rk->bsk", xr, p["w_x"].astype(dtype))
+                           .astype(jnp.float32))
+    log_a0 = jax.nn.log_sigmoid(p["lam"].astype(jnp.float32))   # log a ∈ (−,0)
+    log_a = RGLRU_C * rgate * log_a0[None, None, :]
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) * igate * xr.astype(jnp.float32)
+    return a, b
+
+
+def rglru_apply(p: dict, x: jax.Array, cfg: ArchConfig,
+                state: dict | None) -> tuple[jax.Array, dict | None]:
+    dtype = x.dtype
+    xi = rms_norm(x, p["norm"])
+    gate_br = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", xi,
+                                     p["w_gate_br"].astype(dtype)))
+    xr = jnp.einsum("bsd,dr->bsr", xi, p["w_in"].astype(dtype))
+    buf = state["conv"] if state is not None else None
+    xr, new_buf = _causal_conv(xr, p["conv_w"].astype(dtype),
+                               p["conv_b"].astype(dtype), buf)
+    xr = shard(xr, "batch", "seq", "mlp")
+    a, b = _gates(p, xr)
+    if state is not None:
+        b = b.at[:, 0, :].add(a[:, 0, :] * state["h"].astype(jnp.float32))
+
+    def combine(u, v):
+        a1, b1 = u
+        a2, b2 = v
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    hf = h[:, -1, :]
+    y = h.astype(dtype) * gate_br
+    out = jnp.einsum("bsr,rd->bsd", y, p["w_out"].astype(dtype))
+    return x + out, {"h": hf, "conv": new_buf.astype(jnp.float32)}
+
+
+def rglru_decode(p: dict, x: jax.Array, cfg: ArchConfig, state: dict
+                 ) -> tuple[jax.Array, dict]:
+    """``x [B, 1, D]`` one-step recurrence."""
+    dtype = x.dtype
+    xi = rms_norm(x, p["norm"])
+    gate_br = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", xi,
+                                     p["w_gate_br"].astype(dtype)))
+    xr = jnp.einsum("bsd,dr->bsr", xi, p["w_in"].astype(dtype))
+    xr, new_buf = _causal_conv(xr, p["conv_w"].astype(dtype),
+                               p["conv_b"].astype(dtype), state["conv"])
+    a, b = _gates(p, xr)                           # [B, 1, R]
+    h_new = a[:, 0] * state["h"].astype(jnp.float32) + b[:, 0]
+    y = h_new[:, None, :].astype(dtype) * gate_br
+    out = jnp.einsum("bsr,rd->bsd", y, p["w_out"].astype(dtype))
+    return x + out, {"h": h_new, "conv": new_buf.astype(jnp.float32)}

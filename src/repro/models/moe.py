@@ -1,0 +1,110 @@
+"""Mixture-of-Experts FFN with scatter-based capacity dispatch (EP).
+
+Instead of the Mesh-TF one-hot dispatch einsum (whose one-hot matmul FLOPs
+would dwarf the expert FLOPs and poison the roofline's useful-FLOP ratio),
+tokens are placed into per-expert capacity buffers with a cumsum-derived
+position and an XLA scatter-add (zero FLOPs), batched per batch row:
+
+    x [B, S, D] → buffers [B, E, C, D] → expert SwiGLU (einsum over E) →
+    gather back + combine weights.
+
+Experts shard over the ``model`` axis (EP); GSPMD turns the sharded
+scatter/gather into the dispatch all-to-alls.  Capacity
+``C = ceil(S·top_k·cf / E)``; overflowing tokens are dropped (standard
+Switch-style semantics) — their residual path still carries them.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from .common import PSpec
+
+
+def moe_specs(cfg: ArchConfig) -> dict:
+    m = cfg.moe
+    d, f, e = cfg.d_model, cfg.d_ff, m.n_experts
+    specs = {
+        "router": PSpec((d, e), (None, None)),
+        # EP over 'model' + FSDP over the embed dim: 256/512-way total so the
+        # AdamW moments of the (dominant) expert weights spread pod-wide
+        "w_gate": PSpec((e, d, f), ("experts", "embed_fsdp", None)),
+        "w_up": PSpec((e, d, f), ("experts", "embed_fsdp", None)),
+        "w_down": PSpec((e, f, d), ("experts", None, "embed_fsdp")),
+    }
+    if m.shared_expert:
+        specs.update({
+            "sh_gate": PSpec((d, f), ("embed_fsdp", "mlp")),
+            "sh_up": PSpec((d, f), ("embed_fsdp", "mlp")),
+            "sh_down": PSpec((f, d), ("mlp", "embed_fsdp")),
+        })
+    return specs
+
+
+def capacity(cfg: ArchConfig, seq: int) -> int:
+    m = cfg.moe
+    c = int(np.ceil(seq * m.top_k * m.capacity_factor / m.n_experts))
+    return max(c, m.top_k)
+
+
+def moe_apply(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """``x [B, S, D]`` → ``[B, S, D]``."""
+    m = cfg.moe
+    B, S, D = x.shape
+    E, K = m.n_experts, m.top_k
+    C = capacity(cfg, S)
+    dtype = x.dtype
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, K)                    # [B, S, K]
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    e_flat = top_e.reshape(B, S * K)                          # [B, T]
+    w_flat = top_w.reshape(B, S * K).astype(jnp.float32)
+    onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)       # [B, T, E]
+    pos_all = jnp.cumsum(onehot, axis=1) * onehot             # 1-based slot
+    pos = pos_all.sum(-1) - 1                                 # [B, T]
+    keep = (pos >= 0) & (pos < C)
+    pos_c = jnp.clip(pos, 0, C - 1)
+
+    x_rep = jnp.repeat(x, K, axis=1)                          # [B, T, D]
+    x_rep = (x_rep * keep[..., None].astype(dtype))
+
+    def scatter_row(xr, er, pr):
+        buf = jnp.zeros((E, C, D), dtype)
+        return buf.at[er, pr].add(xr)
+
+    buf = jax.vmap(scatter_row)(x_rep, e_flat, pos_c)         # [B, E, C, D]
+    buf = shard(buf, "batch", "experts", None, None)
+
+    g = jnp.einsum("becd,edf->becf", buf, p["w_gate"].astype(dtype))
+    u = jnp.einsum("becd,edf->becf", buf, p["w_up"].astype(dtype))
+    h = jax.nn.silu(g) * u
+    out_buf = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(dtype))
+    out_buf = shard(out_buf, "batch", "experts", None, None)
+
+    def gather_row(ob, er, pr):
+        return ob[er, pr]                                     # [T, D]
+
+    y = jax.vmap(gather_row)(out_buf, e_flat, pos_c)          # [B, T, D]
+    y = y * (w_flat * keep.astype(jnp.float32))[..., None].astype(dtype)
+    y = y.reshape(B, S, K, D).sum(axis=2)
+
+    if m.shared_expert:
+        from .common import swiglu
+        y = y + swiglu(x, p["sh_gate"].astype(dtype),
+                       p["sh_up"].astype(dtype), p["sh_down"].astype(dtype))
+    return y
+
+
+def aux_load_balance_loss(logits: jax.Array, top_e: jax.Array, n_experts: int
+                          ) -> jax.Array:
+    """Switch-style auxiliary loss: E · Σ_e f_e · P_e (optional in training)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    pe = probs.mean(axis=(0, 1))
+    fe = jax.nn.one_hot(top_e[..., 0], n_experts).mean(axis=(0, 1))
+    return n_experts * jnp.sum(pe * fe)

@@ -1,0 +1,123 @@
+"""Architecture registry: name → config + step functions + input specs.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input of a
+(config × run-shape) cell — weak-type-correct, shardable, no allocation —
+exactly what ``launch/dryrun.py`` lowers against.  Modality frontends are
+stubs per the assignment: whisper receives precomputed frame embeddings,
+the VLM receives precomputed patch embeddings.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, RunShape, SHAPES, cell_applicable
+from . import transformer as tfm
+
+_CONFIG_MODULES = {
+    "whisper-base": "whisper_base",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe_42b_a66b",
+    "mistral-nemo-12b": "mistral_nemo_12b",
+    "llama3-405b": "llama3_405b",
+    "olmo-1b": "olmo_1b",
+    "qwen3-32b": "qwen3_32b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "llama-3.2-vision-90b": "llama32_vision_90b",
+}
+
+ARCH_NAMES = list(_CONFIG_MODULES)
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in _CONFIG_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_NAMES}")
+    mod = importlib.import_module(f"repro.configs.{_CONFIG_MODULES[name]}")
+    return mod.CONFIG
+
+
+def input_specs(cfg: ArchConfig, shape: RunShape) -> dict[str, Any]:
+    """ShapeDtypeStructs for the batch of one run cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    cd = jnp.dtype(cfg.compute_dtype)
+    if shape.kind in ("train", "prefill"):
+        batch: dict[str, Any] = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct((B, cfg.encoder_seq,
+                                                    cfg.d_model), cd)
+        if cfg.family == "vlm":
+            batch["patches"] = jax.ShapeDtypeStruct((B, cfg.vision_tokens,
+                                                     cfg.d_model), cd)
+        return batch
+    # decode: one token + caches sized for S
+    return {
+        "token": jax.ShapeDtypeStruct((B, 1), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+        "cache": tfm.abstract_cache(cfg, B, S),
+    }
+
+
+def batch_logical(cfg: ArchConfig, shape: RunShape) -> dict[str, Any]:
+    """Logical axis names for every input (resolved to NamedShardings by the
+    dry-run under the active mesh rules)."""
+    from repro.models.common import logical_tree
+    from repro.models.transformer import cache_specs
+    if shape.kind in ("train", "prefill"):
+        out: dict[str, Any] = {"tokens": ("batch", "seq")}
+        if cfg.family == "encdec":
+            out["frames"] = ("batch", "frames", None)
+        if cfg.family == "vlm":
+            out["patches"] = ("batch", "patches", None)
+        return out
+    return {"token": ("batch", None), "pos": (),
+            "cache": logical_tree(cache_specs(cfg, shape.global_batch,
+                                              shape.seq_len))}
+
+
+# ---------------------------------------------------------------------------
+# step functions (model-level; optimizer wrapping lives in repro.train)
+# ---------------------------------------------------------------------------
+
+def loss_fn(params: dict, batch: dict, cfg: ArchConfig) -> jax.Array:
+    """Next-token cross entropy (fp32 logsumexp over the sharded vocab).
+
+    The target pick uses an iota-mask reduction instead of
+    ``take_along_axis`` — a gather over the vocab axis would force GSPMD to
+    all-gather the [B,S,V] logits; the mask reduction stays shard-local."""
+    logits = tfm.forward_train(params, batch, cfg).astype(jnp.float32)
+    targets = batch["tokens"][:, 1:]
+    logits = logits[:, :-1, :]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    picked = jnp.sum(jnp.where(vocab_iota == targets[..., None], logits, 0.0),
+                     axis=-1)
+    return (lse - picked).mean()
+
+
+def make_eval_step(cfg: ArchConfig):
+    def eval_step(params, batch):
+        return loss_fn(params, batch, cfg)
+    return eval_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        return tfm.forward_prefill(params, batch, cfg)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    def serve_step(params, batch):
+        return tfm.forward_decode(params, batch["cache"], batch["token"],
+                                  batch["pos"], cfg)
+    return serve_step
+
+
+def applicable_cells(name: str) -> list[tuple[str, bool, str]]:
+    cfg = get_config(name)
+    return [(s.name, *cell_applicable(cfg, s)) for s in SHAPES.values()]

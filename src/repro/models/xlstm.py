@@ -1,0 +1,251 @@
+"""xLSTM blocks (arXiv:2405.04517) — mLSTM (matrix memory, chunkwise-
+parallel) and sLSTM (scalar memory, sequential scan).
+
+TPU adaptation notes (DESIGN.md §2 applies to models too):
+* mLSTM uses the *chunkwise* formulation (GLA-style): intra-chunk quadratic
+  attention-like math on the MXU + inter-chunk state recurrence via
+  ``lax.scan`` over chunks.  Cost is linear in sequence length — this is the
+  arch that runs the ``long_500k`` cell.
+* Gating is sigmoid-stabilized (the paper's exp-gates with max-stabilizer are
+  replaced by sigmoid input gates; noted as a numerical simplification that
+  preserves the compute/memory structure).
+* sLSTM keeps its inherently sequential recurrence (``lax.scan`` over time);
+  its per-step math is head-blocked matmuls.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from .common import PSpec, rms_norm
+
+MLSTM_CHUNK = 256
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_specs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    inner = d                      # proj factor 1 → ≈6·D² params/block
+    nh = cfg.n_heads
+    return {
+        "norm": PSpec((d,), (None,), "zeros"),
+        "w_up": PSpec((d, 2 * inner), ("embed_fsdp", "mlp")),
+        "wq": PSpec((inner, inner), ("embed_fsdp", "heads")),
+        "wk": PSpec((inner, inner), ("embed_fsdp", "heads")),
+        "wv": PSpec((inner, inner), ("embed_fsdp", "heads")),
+        "w_if": PSpec((inner, 2 * nh), (None, None)),
+        "out_norm": PSpec((inner,), (None,), "zeros"),
+        "w_down": PSpec((inner, d), ("mlp", "embed_fsdp")),
+    }
+
+
+def mlstm_state_specs(cfg: ArchConfig, batch: int) -> dict:
+    inner = cfg.d_model
+    nh = cfg.n_heads
+    dh = inner // nh
+    return {
+        "C": PSpec((batch, nh, dh, dh), ("batch", None, "state", None), "zeros", dtype="float32"),
+        "n": PSpec((batch, nh, dh), ("batch", None, "state"), "zeros", dtype="float32"),
+    }
+
+
+def _mlstm_qkvif(p: dict, x: jax.Array, cfg: ArchConfig):
+    dtype = x.dtype
+    inner = cfg.d_model
+    nh = cfg.n_heads
+    dh = inner // nh
+    up = jnp.einsum("bsd,dk->bsk", x, p["w_up"].astype(dtype))
+    xm, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bsd,dk->bsk", xm, p["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dk->bsk", xm, p["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dk->bsk", xm, p["wv"].astype(dtype))
+    gates = jnp.einsum("bsd,dg->bsg", xm, p["w_if"].astype(dtype))
+    B, S = x.shape[:2]
+    q = q.reshape(B, S, nh, dh) / np.sqrt(dh)
+    k = k.reshape(B, S, nh, dh)
+    v = v.reshape(B, S, nh, dh)
+    i_g, f_g = jnp.split(gates.astype(jnp.float32), 2, axis=-1)  # [B, S, NH]
+    return q, k, v, jax.nn.sigmoid(i_g), jax.nn.sigmoid(f_g) * 0.999 + 5e-4, z
+
+
+def mlstm_apply(p: dict, x: jax.Array, cfg: ArchConfig,
+                state: dict | None) -> tuple[jax.Array, dict | None]:
+    """Sequence form (train/prefill).  Returns (y, final state)."""
+    dtype = x.dtype
+    B, S, D = x.shape
+    nh = cfg.n_heads
+    dh = D // nh
+    h = rms_norm(x, p["norm"])
+    q, k, v, ig, fg, z = _mlstm_qkvif(p, h, cfg)
+
+    L = min(MLSTM_CHUNK, S)
+    assert S % L == 0, f"mLSTM chunk {L} must divide seq {S}"
+    NC = S // L
+
+    def cshape(t, extra):  # [B, S, ...] → [NC, B, L, ...]
+        return t.reshape(B, NC, L, *extra).transpose(1, 0, 2, *range(3, 3 + len(extra)))
+
+    qc = cshape(q.astype(jnp.float32), (nh, dh))
+    kc = cshape(k.astype(jnp.float32), (nh, dh))
+    vc = cshape(v.astype(jnp.float32), (nh, dh))
+    ic = cshape(ig, (nh,))
+    fc = cshape(fg, (nh,))
+
+    C0 = jnp.zeros((B, nh, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, nh, dh), jnp.float32)
+    if state is not None:
+        C0 = C0 + state["C"].astype(jnp.float32)
+        n0 = n0 + state["n"].astype(jnp.float32)
+
+    causal = jnp.tril(jnp.ones((L, L), bool))
+
+    def chunk_step(carry, xs):
+        C, n = carry
+        qb, kb, vb, ib, fb = xs                    # [B, L, NH, ...]
+        lf = jnp.log(fb)                           # [B, L, NH]
+        cl = jnp.cumsum(lf, axis=1)                # decay from chunk start
+        dstart = jnp.exp(cl)                       # Π_{s<=t} f_s
+        # inter-chunk: h_t += (d_t · q_t)ᵀ C_prev
+        h_inter = jnp.einsum("blhd,bhde->blhe", qb * dstart[..., None], C)
+        # intra-chunk: S[t,s] = exp(cl_t − cl_s) · i_s · (q_t·k_s), s ≤ t.
+        # Mask the *exponent*: exp of the (discarded) upper triangle would
+        # overflow and its inf·0 poisons the backward pass with NaNs.
+        qk = jnp.einsum("blhd,bmhd->bhlm", qb, kb)
+        expo = cl[:, :, None, :] - cl[:, None, :, :]             # [B, L, M, NH]
+        expo = jnp.where(causal[None, :, :, None], expo, -30.0)
+        gate = jnp.exp(expo) * ib[:, None, :, :]
+        gate = jnp.where(causal[None, :, :, None], gate, 0.0)
+        sc = qk * gate.transpose(0, 3, 1, 2)
+        h_intra = jnp.einsum("bhlm,bmhd->blhd", sc, vb)
+        # normalizer
+        n_inter = jnp.einsum("blhd,bhd->blh", qb * dstart[..., None], n)
+        n_intra = jnp.einsum("bhlm,bmh->blh",
+                             sc, jnp.ones(vb.shape[:3]))  # Σ weights proxy
+        denom = jnp.maximum(jnp.abs(n_inter + n_intra), 1.0)[..., None]
+        h_out = (h_inter + h_intra) / denom
+        # state to next chunk
+        dtail = jnp.exp(cl[:, -1:, :] - cl)                       # Π_{s<t<=L}
+        kv = jnp.einsum("blhd,blhe->bhde",
+                        kb * (dtail * ib)[..., None], vb)
+        C_new = C * jnp.exp(cl[:, -1, :])[:, :, None, None] + kv
+        n_new = n * jnp.exp(cl[:, -1, :])[:, :, None] + \
+            jnp.einsum("blhd->bhd", kb * (dtail * ib)[..., None])
+        return (C_new, n_new), h_out
+
+    (Cf, nf), hs = jax.lax.scan(chunk_step, (C0, n0), (qc, kc, vc, ic, fc))
+    hs = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, D)             # [B,S,D]
+    hs = rms_norm(hs.astype(dtype), p["out_norm"])
+    y = hs * jax.nn.silu(z)
+    y = shard(y, "batch", "seq", None)
+    out = jnp.einsum("bsk,kd->bsd", y, p["w_down"].astype(dtype))
+    new_state = {"C": Cf.astype(jnp.float32), "n": nf.astype(jnp.float32)}
+    return x + out, new_state
+
+
+def mlstm_decode(p: dict, x: jax.Array, cfg: ArchConfig, state: dict
+                 ) -> tuple[jax.Array, dict]:
+    """One-token recurrent step.  ``x [B, 1, D]``."""
+    dtype = x.dtype
+    B, _, D = x.shape
+    nh = cfg.n_heads
+    dh = D // nh
+    h = rms_norm(x, p["norm"])
+    q, k, v, ig, fg, z = _mlstm_qkvif(p, h, cfg)
+    q, k, v = (t[:, 0].astype(jnp.float32) for t in (q, k, v))   # [B, NH, dh]
+    ig, fg = ig[:, 0], fg[:, 0]                                  # [B, NH]
+    C = state["C"].astype(jnp.float32)
+    n = state["n"].astype(jnp.float32)
+    C_new = fg[..., None, None] * C + ig[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", k, v)
+    n_new = fg[..., None] * n + ig[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n_new)), 1.0)
+    hout = (num / den[..., None]).reshape(B, 1, D).astype(dtype)
+    hout = rms_norm(hout, p["out_norm"])
+    y = hout * jax.nn.silu(z)
+    out = jnp.einsum("bsk,kd->bsd", y, p["w_down"].astype(dtype))
+    return x + out, {"C": C_new, "n": n_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_specs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    return {
+        "norm": PSpec((d,), (None,), "zeros"),
+        "w_g": PSpec((d, 4 * d), ("embed_fsdp", "mlp")),
+        "r_g": PSpec((nh, dh, 4 * dh), (None, None, None), scale=1.0 / np.sqrt(dh)),
+        "out_norm": PSpec((d,), (None,), "zeros"),
+        "w_down": PSpec((d, d), ("mlp", "embed_fsdp")),
+    }
+
+
+def slstm_state_specs(cfg: ArchConfig, batch: int) -> dict:
+    nh = cfg.n_heads
+    dh = cfg.d_model // nh
+    sl = ("batch", None, "state")
+    return {"h": PSpec((batch, nh, dh), sl, "zeros", dtype="float32"),
+            "c": PSpec((batch, nh, dh), sl, "zeros", dtype="float32"),
+            "n": PSpec((batch, nh, dh), sl, "zeros", dtype="float32")}
+
+
+def _slstm_cell(gx, h, c, n, r_g):
+    """One recurrence step.  gx [B, NH, 4dh] (input contribution)."""
+    gr = jnp.einsum("bhd,hdg->bhg", h, r_g)
+    gi, gf, gz, go = jnp.split(gx + gr, 4, axis=-1)
+    i = jax.nn.sigmoid(gi)
+    f = jax.nn.sigmoid(gf)
+    zt = jnp.tanh(gz)
+    o = jax.nn.sigmoid(go)
+    c_new = f * c + i * zt
+    n_new = f * n + i
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return h_new, c_new, n_new
+
+
+def slstm_apply(p: dict, x: jax.Array, cfg: ArchConfig,
+                state: dict | None) -> tuple[jax.Array, dict | None]:
+    dtype = x.dtype
+    B, S, D = x.shape
+    nh = cfg.n_heads
+    dh = D // nh
+    xi = rms_norm(x, p["norm"])
+    gx = jnp.einsum("bsd,dg->bsg", xi, p["w_g"].astype(dtype))
+    gx = gx.reshape(B, S, nh, 4 * dh).astype(jnp.float32)
+    r_g = p["r_g"].astype(jnp.float32)
+
+    h0 = jnp.zeros((B, nh, dh), jnp.float32)
+    if state is not None:
+        h0 = h0 + state["h"].astype(jnp.float32)
+        c0 = state["c"].astype(jnp.float32)
+        n0 = state["n"].astype(jnp.float32)
+    else:
+        c0, n0 = jnp.zeros_like(h0), jnp.zeros_like(h0)
+
+    def step(carry, g_t):
+        h, c, n = carry
+        h, c, n = _slstm_cell(g_t, h, c, n, r_g)
+        return (h, c, n), h
+
+    (hf, cf, nf), hs = jax.lax.scan(step, (h0, c0, n0),
+                                    gx.transpose(1, 0, 2, 3))
+    hs = hs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(dtype)
+    hs = rms_norm(hs, p["out_norm"])
+    out = jnp.einsum("bsd,dk->bsk", hs, p["w_down"].astype(dtype))
+    return x + out, {"h": hf, "c": cf, "n": nf}
+
+
+def slstm_decode(p: dict, x: jax.Array, cfg: ArchConfig, state: dict
+                 ) -> tuple[jax.Array, dict]:
+    y, new_state = slstm_apply(p, x, cfg, state)
+    return y, new_state

@@ -1,0 +1,91 @@
+"""kNN-softmax approximation served through Dumpy (paper §1, application 3).
+
+Large-vocabulary decoding spends its time on the ``[d_model → vocab]`` logit
+matmul.  The kNN-softmax trick [69] observes that softmax mass concentrates
+on the output embeddings nearest the hidden state: retrieve the top-R
+candidate tokens with an ANN index, compute exact logits only for them.  The
+paper's own evaluation (kNN recall ≥ 80% → near-exact accuracy) is exactly
+Dumpy's approximate-search operating point.
+
+Dumpy indexes the *output embedding rows* (vocab vectors of length d_model,
+z-normalized as data series); each decode step routes the hidden state and
+runs extended approximate search (Alg. 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.build import DumpyParams
+from repro.core.index import DumpyIndex
+from repro.core.sax import SaxParams
+from repro.core.search import extended_search
+from repro.core.split import SplitParams
+from repro.data.series import pad_to_multiple, z_normalize
+
+
+@dataclasses.dataclass
+class KnnSoftmaxStats:
+    tokens: int = 0
+    exact_in_topr: int = 0          # retrieval recall numerator
+    agree_argmax: int = 0           # approx argmax == exact argmax
+
+
+class KnnSoftmaxHead:
+    def __init__(self, lm_head: np.ndarray, *, w: int = 8, th: int = 256,
+                 r_candidates: int = 512, nbr_nodes: int = 8):
+        """``lm_head [d_model, vocab]`` — the output embedding matrix.
+
+        Maximum-inner-product search reduces to Euclidean kNN by the standard
+        augmentation: index ``x' = [x, sqrt(M^2 - |x|^2)]`` (all rows then
+        share norm M) and query ``q' = [q, 0]`` — then
+        ``argmin |q'-x'|^2 = argmax q·x`` exactly.  Rows are mean/scale
+        standardized per-feature so the N(0,1) SAX breakpoints stay busy."""
+        self.lm_head = np.asarray(lm_head, np.float32)
+        vocab_vectors = self.lm_head.T                     # [vocab, d]
+        norms2 = (vocab_vectors ** 2).sum(axis=1)
+        m2 = norms2.max()
+        aug = np.sqrt(np.maximum(m2 - norms2, 0.0))[:, None]
+        rows = np.concatenate([vocab_vectors, aug], axis=1)
+        # translation + *isotropic* scale preserve L2 neighbor order exactly
+        self.mu = rows.mean(axis=0)
+        self.sd = float(rows.std()) + 1e-6
+        std = ((rows - self.mu) / self.sd).astype(np.float32)
+        # zero-pad to a multiple of w (edge-replication would overweight the
+        # augmented MIPS coordinate w-fold and distort distances)
+        self.pad = (-std.shape[1]) % w
+        series = np.pad(std, ((0, 0), (0, self.pad)))
+        params = DumpyParams(sax=SaxParams(w=w, b=8),
+                             split=SplitParams(th=th))
+        self.index = DumpyIndex.build(series, params)
+        self.w = w
+        self.r = r_candidates
+        self.nbr = nbr_nodes
+        self.stats = KnnSoftmaxStats()
+
+    def candidates(self, h: np.ndarray) -> np.ndarray:
+        """Top-R candidate token ids for hidden state ``h [d_model]``."""
+        q = np.concatenate([np.asarray(h, np.float32), [0.0]])
+        q = (q - self.mu) / self.sd   # same isometry(+scale) as the index
+        q = np.pad(q, (0, self.pad)).astype(np.float32)
+        ids, _, _ = extended_search(self.index, q, self.r, self.nbr)
+        return ids
+
+    def logits_sparse(self, h: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """(candidate ids, exact logits over candidates)."""
+        cand = self.candidates(h)
+        return cand, h @ self.lm_head[:, cand]
+
+    def step(self, h: np.ndarray, track_exact: bool = True) -> int:
+        cand, logit_c = self.logits_sparse(h)
+        tok = int(cand[int(np.argmax(logit_c))])
+        if track_exact:
+            full = h @ self.lm_head
+            exact = int(np.argmax(full))
+            self.stats.tokens += 1
+            self.stats.exact_in_topr += int(exact in set(int(c) for c in cand))
+            self.stats.agree_argmax += int(exact == tok)
+        return tok

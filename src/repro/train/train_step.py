@@ -1,0 +1,49 @@
+"""Train-step builders: loss → grad → clip → AdamW, as a single jit-able
+function over (params, opt_state, batch)."""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.registry import loss_fn
+from . import optimizer as opt
+
+
+def make_train_step(cfg: ArchConfig, ocfg: opt.AdamWConfig
+                    ) -> Callable[[Any, dict, dict], tuple[Any, dict, dict]]:
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg))(params)
+        new_params, new_state, metrics = opt.apply(params, grads, opt_state, ocfg)
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_state, metrics
+    return train_step
+
+
+def make_microbatched_train_step(cfg: ArchConfig, ocfg: opt.AdamWConfig,
+                                 n_micro: int):
+    """Gradient accumulation over ``n_micro`` microbatches (sequential scan —
+    for memory-bound cells; HBM peak scales 1/n_micro for activations)."""
+    acc_dt = jnp.dtype(ocfg.accum_dtype)
+
+    def train_step(params, opt_state, batch):
+        def micro(carry, mb):
+            acc = carry
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p, mb, cfg))(params)
+            acc = jax.tree.map(lambda a, g: a + g.astype(acc_dt), acc, grads)
+            return acc, loss
+
+        split = jax.tree.map(
+            lambda x: x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:]),
+            batch)
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+        acc, losses = jax.lax.scan(micro, zero, split)
+        grads = jax.tree.map(lambda g: (g / n_micro), acc)
+        new_params, new_state, metrics = opt.apply(params, grads, opt_state, ocfg)
+        metrics = dict(metrics, loss=losses.mean())
+        return new_params, new_state, metrics
+    return train_step

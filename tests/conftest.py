@@ -1,0 +1,16 @@
+import os
+import sys
+
+# Tests must see exactly 1 device (the dry-run sets its own 512-device flag
+# in a subprocess).  Keep XLA on a deterministic single-threaded-ish setup.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,95 @@
+"""Baseline indexes: structural fidelity + exact-search correctness."""
+import numpy as np
+import pytest
+
+from repro.core.baselines.brute import brute_force_knn
+from repro.core.baselines.dstree import DSTreeIndex
+from repro.core.baselines.isax2plus import build_isax2plus
+from repro.core.baselines.tardis import build_tardis
+from repro.core.build import DumpyParams
+from repro.core.index import DumpyIndex
+from repro.core.sax import SaxParams
+from repro.core.search import exact_search
+from repro.core.split import SplitParams
+from repro.data.series import random_walks
+
+PARAMS = DumpyParams(sax=SaxParams(w=8, b=8), split=SplitParams(th=128))
+
+
+@pytest.fixture(scope="module")
+def db():
+    return random_walks(5000, 64, seed=1)
+
+
+def test_isax2plus_binary_structure(db):
+    idx = build_isax2plus(db, PARAMS)
+    # below the first layer every internal node splits on exactly one segment
+    def check(node, depth):
+        if node.is_leaf:
+            return
+        if depth > 0:
+            assert len(node.csl) == 1
+        seen = set()
+        for c in node.children.values():
+            if id(c) not in seen:
+                seen.add(id(c))
+                check(c, depth + 1)
+    check(idx.root, 0)
+    counts = np.bincount(idx.flat.order, minlength=len(db))
+    assert np.all(counts == 1)
+
+
+def test_tardis_full_ary_structure(db):
+    idx = build_tardis(db, PARAMS)
+    def check(node):
+        if node.is_leaf:
+            return
+        w = len(node.sym)
+        avail = sum(1 for j in range(w) if node.card[j] < PARAMS.sax.b + 0)
+        # full-ary: csl covers every refinable segment
+        assert len(node.csl) == sum(
+            1 for j in range(w)
+            if node.card[j] - (1 if j in node.csl else 0) < PARAMS.sax.b)
+        seen = set()
+        for c in node.children.values():
+            if id(c) not in seen:
+                seen.add(id(c))
+                check(c)
+    check(idx.root)
+
+
+@pytest.mark.parametrize("builder", [build_isax2plus, build_tardis])
+def test_baseline_exact_search_correct(db, builder):
+    idx = builder(db, PARAMS)
+    q = random_walks(1, 64, seed=77)[0]
+    gt, gt_d = brute_force_knn(db, q, 10)
+    ids, d, _ = exact_search(idx, q, 10)
+    np.testing.assert_allclose(np.sort(d), np.sort(gt_d), atol=1e-3)
+
+
+def test_dstree_exact_search_correct(db):
+    ds = DSTreeIndex(db, th=128)
+    q = random_walks(1, 64, seed=78)[0]
+    gt, gt_d = brute_force_knn(db, q, 10)
+    ids, d, _ = ds.exact_search(q, 10)
+    np.testing.assert_allclose(np.sort(d), np.sort(gt_d), atol=1e-3)
+
+
+def test_dstree_lb_is_lower_bound(db):
+    ds = DSTreeIndex(db, th=256)
+    q = random_walks(1, 64, seed=79)[0]
+    from repro.core.lb import ed_np
+    leaves = ds._leaves(ds.root)
+    for leaf in leaves[:20]:
+        lb = ds._lb(leaf, q)
+        true = ed_np(q, db[leaf.series_ids]).min()
+        assert lb <= true + 1e-3
+
+
+def test_structure_statistics_ranking(db):
+    """Table-1 qualitative ranking: Dumpy fill factor > iSAX2+; TARDIS has
+    the most leaves before partitioning (here: >= Dumpy's)."""
+    params = DumpyParams(sax=SaxParams(w=16, b=8), split=SplitParams(th=128))
+    dmp = DumpyIndex.build(random_walks(8000, 64, seed=2), params)
+    isx = build_isax2plus(random_walks(8000, 64, seed=2), params)
+    assert dmp.stats.fill_factor > isx.stats.fill_factor

@@ -1,0 +1,194 @@
+"""Distributed-runtime tests: sharded Dumpy build/search, the loop-aware HLO
+cost analyzer, sharding-rule resolution, and a small-mesh dry-run executed in
+a subprocess (the only place a multi-device mesh can exist under pytest)."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.baselines.brute import brute_force_knn
+from repro.core.build import DumpyParams
+from repro.core.distributed import build_distributed, build_step, search_distributed
+from repro.core.sax import SaxParams
+from repro.core.split import SplitParams
+from repro.data.series import random_walks
+from repro.distributed import hlo_cost
+from repro.distributed.sharding import (DEFAULT_RULES, logical_rules,
+                                        logical_spec, shard)
+
+PARAMS = DumpyParams(sax=SaxParams(w=8, b=8), split=SplitParams(th=128))
+
+
+def test_build_step_matches_host_encoder():
+    db = random_walks(512, 64, seed=0)
+    paa, sax, hist = build_step(jnp.asarray(db), 8, 8)
+    from repro.core.sax import sax_encode_np
+    paa_h, sax_h = sax_encode_np(db, PARAMS.sax)
+    np.testing.assert_allclose(np.asarray(paa), paa_h, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(sax), sax_h)
+    assert int(jnp.sum(hist)) == 512              # histogram covers all series
+
+
+def test_distributed_build_and_search_equal_host_path():
+    db = random_walks(3000, 64, seed=1)
+    idx = build_distributed(db, PARAMS)
+    qs = random_walks(4, 64, seed=99)
+    ids, d = search_distributed(idx, qs, k=5)
+    for i, q in enumerate(qs):
+        gt_ids, gt_d = brute_force_knn(db, q, 5)
+        np.testing.assert_allclose(np.sort(d[i]), np.sort(gt_d), atol=1e-3)
+
+
+def test_sharding_rules_resolution_no_mesh_is_noop():
+    x = jnp.ones((4, 8))
+    assert shard(x, "batch", "embed") is x          # no mesh → identity
+
+
+def test_sharding_rules_drop_conflicts_and_missing_axes():
+    mesh = jax.make_mesh((1,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    with logical_rules(mesh, DEFAULT_RULES):
+        spec = logical_spec(("heads", "mlp"))       # both map to 'model'
+        # second use of the same mesh axis must be dropped
+        assert spec[0] == "model" and spec[1] is None
+        spec2 = logical_spec(("batch",))            # pod/data not in mesh
+        assert spec2[0] is None
+
+
+def test_hlo_cost_flops_scan_and_collectives():
+    A = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    W = jax.ShapeDtypeStruct((5, 256, 256), jnp.float32)
+
+    def f(a, ws):
+        def body(x, w):
+            return x @ w, None
+        y, _ = jax.lax.scan(body, a, ws)
+        return y
+
+    txt = jax.jit(f).lower(A, W).compile().as_text()
+    r = hlo_cost.analyze(txt)
+    assert r.flops == pytest.approx(5 * 2 * 256**3, rel=1e-6)
+    assert r.unknown_loops == 0
+    assert r.hbm_bytes > 0
+
+
+def test_small_mesh_dryrun_subprocess():
+    """lower+compile one small cell on an 8-device mesh in a subprocess
+    (device count must be set before jax init, hence the subprocess)."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, json
+from jax.sharding import NamedSharding, PartitionSpec as P
+import sys
+sys.path.insert(0, "src")
+from repro.configs.base import reduced, RunShape
+from repro.distributed.sharding import logical_rules, shardings_for, DEFAULT_RULES
+from repro.models import registry, transformer as tfm
+from repro.models.common import logical_tree
+from repro.train import optimizer as opt
+from repro.train.train_step import make_train_step
+
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+cfg = reduced(registry.get_config("olmo-1b"), vocab=512, d_model=64)
+with logical_rules(mesh, DEFAULT_RULES):
+    params_abs = tfm.abstract_params(cfg)
+    params_sh = shardings_for(params_abs, logical_tree(tfm.init_specs(cfg)))
+    batch_abs = {"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32)}
+    batch_sh = {"tokens": NamedSharding(mesh, P("data", None))}
+    ocfg = opt.AdamWConfig()
+    opt_abs = opt.abstract_state(params_abs, ocfg)
+    opt_sh = shardings_for(opt_abs, opt.state_logical(
+        logical_tree(tfm.init_specs(cfg))))
+    jitted = jax.jit(make_train_step(cfg, ocfg),
+                     in_shardings=(params_sh, opt_sh, batch_sh))
+    compiled = jitted.lower(params_abs, opt_abs, batch_abs).compile()
+    mem = compiled.memory_analysis()
+    print(json.dumps({"ok": True,
+                      "args": mem.argument_size_in_bytes,
+                      "n_dev": len(jax.devices())}))
+"""
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("JAX_PLATFORMS", None)
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))), env=env, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["ok"] and rec["n_dev"] == 8
+
+
+def test_knn_softmax_mips_reduction_exactness():
+    """The augmented-coordinate reduction must make brute-force L2 order
+    equal inner-product order."""
+    rng = np.random.default_rng(0)
+    d, vocab = 16, 400
+    W = rng.standard_normal((d, vocab)).astype(np.float32)
+    W *= rng.uniform(0.5, 2.0, vocab)[None, :]     # spread the norms
+    rows = W.T
+    n2 = (rows ** 2).sum(1)
+    aug = np.sqrt(n2.max() - n2)[:, None]
+    rowsp = np.concatenate([rows, aug], 1)
+    h = rng.standard_normal(d).astype(np.float32)
+    qp = np.concatenate([h, [0.0]])
+    ip_order = np.argsort(-(h @ W))
+    l2_order = np.argsort(((rowsp - qp) ** 2).sum(1))
+    np.testing.assert_array_equal(ip_order[:20], l2_order[:20])
+
+
+def test_knn_softmax_head_end_to_end():
+    from repro.serving.knn_softmax import KnnSoftmaxHead
+    rng = np.random.default_rng(0)
+    W = rng.standard_normal((32, 2048)).astype(np.float32)
+    head = KnnSoftmaxHead(W, w=8, th=128, r_candidates=256, nbr_nodes=8)
+    for _ in range(20):
+        t = rng.integers(2048)
+        h = W[:, t] + 0.1 * rng.standard_normal(32).astype(np.float32)
+        head.step(h)
+    s = head.stats
+    assert s.tokens == 20
+    assert s.exact_in_topr / s.tokens >= 0.5       # retrieval works
+
+
+def test_elastic_checkpoint_restore_across_mesh_sizes(tmp_path):
+    """Checkpoint written on 1 device restores onto an 8-device mesh with
+    production shardings (the manifest stores logical content only)."""
+    ckpt = str(tmp_path / "elastic")
+    from repro.train.checkpoint import CheckpointManager
+    import jax.numpy as jnp2
+    tree = {"w": jnp2.arange(64, dtype=jnp2.float32).reshape(8, 8),
+            "b": jnp2.ones((16,), jnp2.float32)}
+    CheckpointManager(ckpt).save(5, tree, extras={"next_step": 5})
+
+    code = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import jax, jax.numpy as jnp, numpy as np, json
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.train.checkpoint import CheckpointManager
+mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+target = {{"w": jnp.zeros((8, 8)), "b": jnp.zeros((16,))}}
+shardings = {{"w": NamedSharding(mesh, P("data", None)),
+             "b": NamedSharding(mesh, P("data"))}}
+tree, extras = CheckpointManager({ckpt!r}).restore(
+    5, target, sharding_fn=lambda t: shardings)
+assert extras["next_step"] == 5
+assert len(tree["w"].sharding.device_set) == 8
+np.testing.assert_array_equal(np.asarray(tree["w"]),
+                              np.arange(64, dtype=np.float32).reshape(8, 8))
+print(json.dumps({{"ok": True}}))
+"""
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))), env=env, timeout=180)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert json.loads(out.stdout.strip().splitlines()[-1])["ok"]

@@ -1,0 +1,157 @@
+"""End-to-end index behaviour: build invariants, search correctness,
+serialization, and updates (§5.6)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.baselines.brute import brute_force_knn
+from repro.core.build import DumpyParams, collect_leaves
+from repro.core.index import DumpyIndex
+from repro.core.sax import SaxParams
+from repro.core.search import (approximate_search, average_precision,
+                               error_ratio, exact_search, extended_search)
+from repro.core.split import SplitParams
+from repro.data.series import clustered_series, random_walks
+
+PARAMS = DumpyParams(sax=SaxParams(w=8, b=8), split=SplitParams(th=128))
+
+
+@pytest.fixture(scope="module")
+def built():
+    db = random_walks(6000, 64, seed=0)
+    return db, DumpyIndex.build(db, PARAMS)
+
+
+def test_partition_property(built):
+    """Every series appears in exactly one leaf (no fuzzy)."""
+    db, idx = built
+    counts = np.bincount(idx.flat.order, minlength=len(db))
+    assert np.all(counts == 1)
+    offs = idx.flat.leaf_offsets
+    assert offs[0] == 0 and offs[-1] == len(db)
+    assert np.all(np.diff(offs) >= 0)
+
+
+def test_leaf_words_contain_members(built):
+    """Each leaf's iSAX region contains the PAA of all its series — the
+    geometric invariant that makes MINDIST a valid node bound."""
+    db, idx = built
+    for lid in range(idx.flat.n_leaves):
+        lo, hi = idx.flat.leaf_lo[lid], idx.flat.leaf_hi[lid]
+        ids = idx.flat.leaf_slice(lid)
+        paa = idx.paa[ids]
+        assert np.all(paa >= lo[None, :] - 1e-5)
+        assert np.all(paa <= hi[None, :] + 1e-5)
+
+
+def test_leaf_sizes_respect_threshold(built):
+    db, idx = built
+    th = PARAMS.th
+    sizes = np.diff(idx.flat.leaf_offsets)
+    # forced leaves (max cardinality) may exceed th; none expected here
+    assert sizes.max() <= th
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_exact_search_equals_brute_force(seed):
+    db = random_walks(3000, 64, seed=7)
+    idx = DumpyIndex.build(db, PARAMS)
+    q = random_walks(1, 64, seed=100_000 + seed)[0]
+    for k in (1, 10):
+        gt_ids, gt_d = brute_force_knn(db, q, k)
+        ids, d, _ = exact_search(idx, q, k)
+        np.testing.assert_allclose(np.sort(d), np.sort(gt_d), atol=1e-3)
+
+
+def test_exact_search_dtw_equals_brute_force():
+    db = random_walks(400, 64, seed=3)
+    idx = DumpyIndex.build(db, DumpyParams(sax=SaxParams(w=8, b=8),
+                                           split=SplitParams(th=64)))
+    q = random_walks(1, 64, seed=55)[0]
+    gt_ids, gt_d = brute_force_knn(db, q, 5, metric="dtw")
+    ids, d, _ = exact_search(idx, q, 5, metric="dtw")
+    np.testing.assert_allclose(np.sort(d), np.sort(gt_d), atol=1e-3)
+
+
+def test_extended_beats_or_matches_approximate(built):
+    db, idx = built
+    qs = random_walks(15, 64, seed=777)
+    m1, m2 = [], []
+    for q in qs:
+        gt, _ = brute_force_knn(db, q, 10)
+        m1.append(average_precision(approximate_search(idx, q, 10)[0], gt))
+        m2.append(average_precision(extended_search(idx, q, 10, 8)[0], gt))
+    assert np.mean(m2) >= np.mean(m1) - 1e-9
+
+
+def test_metrics():
+    exact = np.array([1, 2, 3, 4])
+    assert average_precision(np.array([1, 2, 3, 4]), exact) == 1.0
+    assert average_precision(np.array([9, 9, 9, 9]), exact) == 0.0
+    ap = average_precision(np.array([1, 9, 2, 9]), exact)
+    assert 0 < ap < 1
+    assert error_ratio(np.array([1.0, 2.0]), np.array([1.0, 2.0])) == 1.0
+    assert error_ratio(np.array([2.0, 4.0]), np.array([1.0, 2.0])) == 2.0
+
+
+def test_save_load_roundtrip(tmp_path, built):
+    db, idx = built
+    path = str(tmp_path / "idx")
+    idx.save(path)
+    idx2 = DumpyIndex.load(path)
+    q = random_walks(1, 64, seed=9)[0]
+    a1, d1, _ = exact_search(idx, q, 5)
+    a2, d2, _ = exact_search(idx2, q, 5)
+    np.testing.assert_array_equal(a1, a2)
+    np.testing.assert_allclose(d1, d2, atol=1e-6)
+    assert idx2.flat.n_leaves == idx.flat.n_leaves
+
+
+def test_insert_and_delete():
+    db = random_walks(1500, 64, seed=4)
+    idx = DumpyIndex.build(db, PARAMS)
+    new = random_walks(3, 64, seed=1234)
+    for s in new:
+        nid = idx.insert(s)
+        ids, d, _ = exact_search(idx, s, 1)
+        assert ids[0] == nid and d[0] < 1e-3     # its own NN is itself
+    # delete: the series must vanish from results
+    victim = int(exact_search(idx, new[0], 1)[0][0])
+    idx.delete(victim)
+    ids, _, _ = exact_search(idx, new[0], 1)
+    assert victim not in ids
+
+
+def test_insert_overflow_triggers_resplit():
+    db = random_walks(900, 64, seed=5)
+    params = DumpyParams(sax=SaxParams(w=8, b=8), split=SplitParams(th=64))
+    idx = DumpyIndex.build(db, params)
+    leaves_before = idx.flat.n_leaves
+    # hammer one region with near-duplicates of an existing series
+    base = db[0]
+    for i in range(80):
+        idx.insert(base + 1e-4 * np.random.default_rng(i).standard_normal(64))
+    sizes = np.diff(idx.flat.leaf_offsets)
+    # any leaf above th must be a *forced* leaf: all members share one
+    # full-resolution SAX word (indistinguishable to any iSAX-family index)
+    for lid in np.nonzero(sizes > params.th)[0]:
+        ids = idx.flat.leaf_slice(int(lid))
+        assert len(np.unique(idx.sax[ids], axis=0)) == 1
+    # search still exact after updates
+    q = random_walks(1, 64, seed=321)[0]
+    gt, gt_d = brute_force_knn(idx.db, q, 5)
+    ids, d, _ = exact_search(idx, q, 5)
+    np.testing.assert_allclose(np.sort(d), np.sort(gt_d), atol=1e-3)
+
+
+def test_skewed_data_build(built):
+    """Clustered (skewed) collections still produce a legal index."""
+    db = clustered_series(5000, 64, n_clusters=8, seed=11)
+    idx = DumpyIndex.build(db, PARAMS)
+    counts = np.bincount(idx.flat.order, minlength=len(db))
+    assert np.all(counts == 1)
+    q = db[17] + 0.01
+    gt, gt_d = brute_force_knn(db, q, 5)
+    ids, d, _ = exact_search(idx, q, 5)
+    np.testing.assert_allclose(np.sort(d), np.sort(gt_d), atol=1e-3)

@@ -1,0 +1,77 @@
+"""Property tests for the lower-bound invariants — the correctness backbone
+of iSAX-family pruning (any violation silently breaks exact search)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+import hypothesis.extra.numpy as hnp
+
+from repro.core.lb import (dtw_batch_jnp, dtw_envelope_np, dtw_np, ed_np,
+                           envelope_paa_np, mindist_dtw_bounds_np,
+                           mindist_paa_bounds_np, node_bounds_np)
+from repro.core.sax import SaxParams, sax_encode_np
+
+PARAMS = SaxParams(w=8, b=8)
+N = 64
+
+series = hnp.arrays(np.float32, (6, N), elements=st.floats(-3, 3, width=32))
+query = hnp.arrays(np.float32, (N,), elements=st.floats(-3, 3, width=32))
+
+
+def _leaf_bounds(xs):
+    """Tightest iSAX region containing all of xs at full cardinality is not
+    what indexes store; use per-series full-resolution words and take the
+    min/max envelope (equivalent to a node containing exactly these)."""
+    _, sax = sax_encode_np(xs, PARAMS)
+    card = np.full((1, PARAMS.w), PARAMS.b)
+    los, his = [], []
+    for s in sax:
+        lo, hi = node_bounds_np(s[None, :].astype(np.int64), card, PARAMS.b)
+        los.append(lo[0])
+        his.append(hi[0])
+    return np.min(los, axis=0), np.max(his, axis=0)
+
+
+@given(series, query)
+@settings(max_examples=60, deadline=None)
+def test_mindist_lower_bounds_ed(xs, q):
+    lo, hi = _leaf_bounds(xs)
+    paa_q, _ = sax_encode_np(q[None, :], PARAMS)
+    lb = mindist_paa_bounds_np(paa_q[0], lo[None, :], hi[None, :], N)[0]
+    true = ed_np(q, xs).min()
+    assert lb <= true + 1e-3, (lb, true)
+
+
+@given(series, query, st.integers(1, 8))
+@settings(max_examples=30, deadline=None)
+def test_envelope_lower_bounds_dtw(xs, q, band):
+    lo, hi = _leaf_bounds(xs)
+    U, L = dtw_envelope_np(q, band)
+    U_seg, L_seg = envelope_paa_np(U, L, PARAMS.w)
+    lb = mindist_dtw_bounds_np(U_seg, L_seg, lo[None, :], hi[None, :], N)[0]
+    true = min(dtw_np(q, x, band) for x in xs)
+    assert lb <= true + 1e-3, (lb, true)
+
+
+@given(query, query.map(lambda x: x + 0.1))
+@settings(max_examples=20, deadline=None)
+def test_dtw_leq_ed_and_symmetric(a, b):
+    band = N // 10
+    d = dtw_np(a, b, band)
+    assert d <= ed_np(a, b[None, :])[0] + 1e-4          # warping only helps
+    assert abs(d - dtw_np(b, a, band)) < 1e-4
+
+
+@given(series, query)
+@settings(max_examples=15, deadline=None)
+def test_dtw_batch_matches_reference(xs, q):
+    band = 6
+    got = np.asarray(dtw_batch_jnp(q, xs, band))
+    want = np.array([dtw_np(q, x, band) for x in xs])
+    np.testing.assert_allclose(got, want, atol=1e-3, rtol=1e-4)
+
+
+def test_mindist_zero_when_inside():
+    xs = np.random.default_rng(0).standard_normal((5, N)).astype(np.float32)
+    lo, hi = _leaf_bounds(xs)
+    paa, _ = sax_encode_np(xs, PARAMS)
+    lb = mindist_paa_bounds_np(paa[0], lo[None, :], hi[None, :], N)
+    assert lb[0] == 0.0

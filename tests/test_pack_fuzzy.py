@@ -1,0 +1,70 @@
+"""Tests for leaf packing (Algorithm 3) and Dumpy-Fuzzy duplication (§6)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.build import DumpyParams
+from repro.core.index import DumpyIndex
+from repro.core.pack import Pack, pack_isax, pack_leaves, popcount
+from repro.core.sax import SaxParams
+from repro.core.split import SplitParams
+from repro.data.series import random_walks
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 20), st.integers(3, 8))
+@settings(max_examples=40, deadline=None)
+def test_pack_invariants(seed, n_nodes, lam):
+    """Every input leaf lands in exactly one pack; packs respect the size cap
+    and the rho*lambda demotion-bit cap."""
+    rng = np.random.default_rng(seed)
+    th, rho = 100, 0.5
+    sids = [int(s) for s in rng.integers(0, 1 << lam, n_nodes)]
+    sizes = [int(s) for s in rng.integers(1, th, n_nodes)]
+    packs = pack_leaves(sids, sizes, lam, th=th, rho=rho, seed=seed)
+    members = sorted(m for p in packs for m in p.members)
+    assert members == list(range(n_nodes))
+    for p in packs:
+        assert p.size == sum(sizes[m] for m in p.members)
+        assert p.demotion_bits() <= rho * lam
+        if len(p.members) > 1:
+            assert p.size <= th
+        # non-masked bits agree across members
+        for m in p.members:
+            assert (sids[m] & ~p.mask) == (p.value & ~p.mask)
+
+
+def test_pack_isax_word_demotion_semantics():
+    parent_sym = np.array([0b1, 0b0], np.int64)
+    parent_card = np.array([1, 1], np.int64)
+    csl = (0, 1)
+    p = Pack(value=0b10, mask=0b01, size=5, members=[0, 1])  # bit for seg 1 demoted
+    sym, card = pack_isax(parent_sym, parent_card, csl, p, b=8)
+    assert card[0] == 2 and sym[0] == 0b11     # refined with bit 1
+    assert card[1] == 1 and sym[1] == 0b0      # demoted → parent word
+
+
+def test_fuzzy_duplication_bounded_and_isax_words_unchanged():
+    db = random_walks(4000, 64, seed=2)
+    params = lambda f: DumpyParams(sax=SaxParams(w=8, b=8),
+                                   split=SplitParams(th=128), fuzzy_f=f,
+                                   max_replica=3)
+    plain = DumpyIndex.build(db, params(0.0))
+    fuzzy = DumpyIndex.build(db, params(0.15))
+    # duplication happened but within the global budget
+    assert fuzzy.stats.n_duplicates > 0
+    assert fuzzy.stats.n_duplicates <= 3 * len(db)
+    # each original id appears at most 1 + max_replica times in the layout
+    counts = np.bincount(fuzzy.flat.order, minlength=len(db))
+    assert counts.max() <= 1 + 3
+    assert counts.min() >= 1                    # no series lost
+    # exact search still exact (pruning untouched by duplication)
+    from repro.core.baselines.brute import brute_force_knn
+    from repro.core.search import exact_search
+    q = random_walks(1, 64, seed=999)[0]
+    gt, _ = brute_force_knn(db, q, 10)
+    got, _, _ = exact_search(fuzzy, q, 10)
+    assert np.array_equal(np.sort(got), np.sort(gt))
+
+
+def test_popcount():
+    assert popcount(0) == 0
+    assert popcount(0b1011) == 3

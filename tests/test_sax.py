@@ -1,0 +1,96 @@
+"""Unit + property tests for SAX/iSAX numerics."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+import hypothesis.extra.numpy as hnp
+
+from repro.core.sax import (SaxParams, breakpoints, breakpoints_ext,
+                            extract_bits_np, isax_bounds_np, next_bits_np,
+                            pack_bits_np, paa_np, prefix_np, region_midpoints,
+                            sax_encode_np, sax_from_paa_np)
+
+
+def test_breakpoints_monotone_and_symmetric():
+    for b in (2, 4, 6, 8):
+        bp = breakpoints(b)
+        assert len(bp) == (1 << b) - 1
+        assert np.all(np.diff(bp) > 0)
+        np.testing.assert_allclose(bp, -bp[::-1], atol=1e-12)
+        assert abs(bp[len(bp) // 2]) < 1e-12  # median breakpoint at 0
+
+
+def test_region_midpoints_inside_regions():
+    for b in (3, 8):
+        bpe = breakpoints_ext(b)
+        mid = region_midpoints(b)
+        assert np.all(mid > bpe[:-1])
+        assert np.all(mid < bpe[1:])
+
+
+def test_paa_constant_series():
+    x = np.full((3, 64), 2.5, np.float32)
+    p = paa_np(x, 8)
+    np.testing.assert_allclose(p, 2.5)
+
+
+@given(hnp.arrays(np.float32, (4, 64),
+                  elements=st.floats(-4, 4, width=32)))
+@settings(max_examples=50, deadline=None)
+def test_sax_symbol_contains_paa(x):
+    """The region addressed by each symbol must contain its PAA value."""
+    params = SaxParams(w=8, b=8)
+    paa, sax = sax_encode_np(x, params)
+    bpe = breakpoints_ext(8)
+    lo = bpe[sax.astype(np.int64)]
+    hi = bpe[sax.astype(np.int64) + 1]
+    assert np.all(paa >= lo - 1e-6)
+    assert np.all(paa <= hi + 1e-6)
+
+
+@given(st.integers(1, 7))
+@settings(max_examples=20, deadline=None)
+def test_isax_prefix_region_nesting(card):
+    """Coarser prefixes cover a superset of the full-resolution region."""
+    b = 8
+    syms = np.arange(256, dtype=np.int64)
+    full_lo, full_hi = isax_bounds_np(syms, np.full(256, b), b)
+    pre = prefix_np(syms, np.full(256, card), b)
+    lo, hi = isax_bounds_np(pre, np.full(256, card), b)
+    assert np.all(lo <= full_lo)
+    assert np.all(hi >= full_hi)
+
+
+def test_sax_monotone_in_value():
+    vals = np.linspace(-5, 5, 1001)[None, :].repeat(1, 0)
+    sym = sax_from_paa_np(vals, 8)
+    assert np.all(np.diff(sym.astype(int)) >= 0)
+    assert sym.min() == 0 and sym.max() == 255
+
+
+def test_pack_extract_roundtrip():
+    rng = np.random.default_rng(1)
+    bits = rng.integers(0, 2, (100, 8))
+    codes = pack_bits_np(bits)
+    got = extract_bits_np(codes, list(range(8)), 8)
+    np.testing.assert_array_equal(got, codes)
+    # extracting a subset keeps those bits in order, MSB first
+    sub = extract_bits_np(codes, [1, 5], 8)
+    expect = bits[:, 1] * 2 + bits[:, 5]
+    np.testing.assert_array_equal(sub, expect)
+
+
+def test_next_bits_refinement():
+    b = 8
+    sax = np.array([[0b10110010, 0b01000000]], np.uint8)
+    card = np.array([0, 0])
+    nb = next_bits_np(sax, card, b)
+    np.testing.assert_array_equal(nb, [[1, 0]])      # MSBs
+    card = np.array([3, 1])
+    nb = next_bits_np(sax, card, b)
+    np.testing.assert_array_equal(nb, [[1, 1]])      # bit 4 of 0b10110010 etc.
+
+
+def test_validate_series_length():
+    with pytest.raises(ValueError):
+        SaxParams(w=16).validate_series_length(100)
+    SaxParams(w=16).validate_series_length(256)

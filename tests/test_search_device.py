@@ -1,0 +1,70 @@
+"""Device-resident (fully-jitted) exact search vs host search & brute force."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.baselines.brute import brute_force_knn
+from repro.core.build import DumpyParams
+from repro.core.index import DumpyIndex
+from repro.core.sax import SaxParams
+from repro.core.search import exact_search
+from repro.core.search_device import exact_search_device
+from repro.core.split import SplitParams
+from repro.data.series import random_walks
+
+PARAMS = DumpyParams(sax=SaxParams(w=8, b=8), split=SplitParams(th=128))
+
+
+@pytest.fixture(scope="module")
+def built():
+    db = random_walks(4000, 64, seed=0)
+    return db, DumpyIndex.build(db, PARAMS)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_device_equals_brute_force(seed):
+    db = random_walks(2500, 64, seed=3)
+    idx = DumpyIndex.build(db, PARAMS)
+    q = random_walks(1, 64, seed=50_000 + seed)[0]
+    gt_ids, gt_d = brute_force_knn(db, q, 10)
+    ids, d, _ = exact_search_device(idx, q, 10)
+    assert len(d) == 10
+    np.testing.assert_allclose(np.sort(d), np.sort(gt_d), atol=1e-3)
+
+
+def test_device_matches_host_and_prunes(built):
+    db, idx = built
+    q = random_walks(1, 64, seed=77)[0]
+    h_ids, h_d, h_st = exact_search(idx, q, 10)
+    d_ids, d_d, visited = exact_search_device(idx, q, 10)
+    np.testing.assert_allclose(np.sort(h_d), np.sort(d_d), atol=1e-3)
+    total_windows = sum(-(-int(n) // 512) for n in
+                        np.diff(idx.flat.leaf_offsets))
+    assert visited <= total_windows
+    # pruning must engage for an easy query (its kth distance is tiny early)
+    q2 = db[7] + 1e-3
+    _, _, visited2 = exact_search_device(idx, q2, 1)
+    assert visited2 < total_windows
+
+
+def test_device_respects_tombstones(built):
+    db, idx = built
+    q = db[42] + 1e-3
+    ids, d, _ = exact_search_device(idx, q, 3)
+    victim = int(ids[0])
+    idx.delete(victim)
+    ids2, _, _ = exact_search_device(idx, q, 3)
+    assert victim not in ids2
+    idx.alive[victim] = True            # restore for other tests
+
+
+def test_device_with_fuzzy_duplicates():
+    db = random_walks(2000, 64, seed=5)
+    idx = DumpyIndex.build(db, DumpyParams(
+        sax=SaxParams(w=8, b=8), split=SplitParams(th=128), fuzzy_f=0.15))
+    q = random_walks(1, 64, seed=123)[0]
+    gt_ids, gt_d = brute_force_knn(db, q, 10)
+    ids, d, _ = exact_search_device(idx, q, 10)
+    assert len(np.unique(ids)) == len(ids)          # dedup worked
+    np.testing.assert_allclose(np.sort(d), np.sort(gt_d), atol=1e-3)

@@ -1,0 +1,109 @@
+"""Tests for the adaptive split machinery (Algorithm 2)."""
+import itertools
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sax import region_midpoints
+from repro.core.split import (SplitParams, brute_force_split_plan,
+                              choose_split_plan, lambda_range, objective,
+                              segment_variances, _marginalize)
+
+
+def test_lambda_range_matches_eq3():
+    # c_n = 100k, th = 10k, F_l=0.5, F_r=3 → 2^λ in [10/3, 20] → λ in [2, 4]
+    lo, hi = lambda_range(100_000, 10_000, 0.5, 3.0, 16)
+    assert (lo, hi) == (2, 4)
+    # tiny node: both collapse to 1
+    lo, hi = lambda_range(10_001, 10_000, 0.5, 3.0, 16)
+    assert lo == 1 and hi >= 1
+    # huge node clipped at w
+    lo, hi = lambda_range(10_000_000_000, 10, 0.5, 3.0, 8)
+    assert hi == 8 and lo == 8
+
+
+def test_variance_additivity_eq2():
+    """Eq. 2: Var of the projection == sum of per-segment variances."""
+    rng = np.random.default_rng(0)
+    sax = rng.integers(0, 256, (500, 6)).astype(np.uint8)
+    v = segment_variances(sax, 8)
+    mids = region_midpoints(8)
+    vals = mids[sax.astype(int)]
+    for keep in [(0, 2), (1, 3, 5), (0, 1, 2, 3, 4, 5)]:
+        proj = vals[:, list(keep)]
+        mu = proj.mean(axis=0)
+        direct = ((proj - mu) ** 2).sum(axis=1).mean()
+        np.testing.assert_allclose(direct, v[list(keep)].sum(), rtol=1e-9)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(3, 7))
+@settings(max_examples=25, deadline=None)
+def test_marginalize_equals_recount(seed, m):
+    """Hierarchical child sizes == recounting raw codes (Alg. 2 speedup 3)."""
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 1 << m, 2000)
+    base = np.bincount(codes, minlength=1 << m)
+    for lam in range(1, m):
+        for keep in itertools.combinations(range(m), lam):
+            got = _marginalize(base, m, keep)
+            # direct recount of the kept bits
+            sub = np.zeros(len(codes), np.int64)
+            for i, p in enumerate(keep):
+                sub |= ((codes >> (m - 1 - p)) & 1) << (lam - 1 - i)
+            want = np.bincount(sub, minlength=1 << lam)
+            np.testing.assert_array_equal(got, want)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_dfs_finds_brute_force_optimum(seed):
+    """The memoized DFS must reach the same optimum as exhaustive search."""
+    rng = np.random.default_rng(seed)
+    m = 6
+    segs = list(range(m))
+    codes = rng.integers(0, 1 << m, 3000)
+    base = np.bincount(codes, minlength=1 << m).astype(np.int64)
+    seg_vars = rng.uniform(0.01, 2.0, m)
+    params = SplitParams(th=300)
+    a = choose_split_plan(base, seg_vars, segs, 3000, params)
+    b = brute_force_split_plan(base, seg_vars, segs, 3000, params)
+    # scores must match (plans may tie)
+    def score(plan):
+        keep = tuple(segs.index(s) for s in plan)
+        hist = _marginalize(base, m, keep)
+        return objective(hist, seg_vars[list(keep)].sum(), len(keep),
+                         params.th, params.alpha)
+    assert abs(score(a) - score(b)) < 1e-9
+
+
+def test_objective_prefers_balanced_high_variance():
+    """Fig. 5 scenarios: (a) balanced+high-var beats (b) imbalanced and (c)
+    low-variance."""
+    th = 100
+    balanced = np.array([90, 110, 95, 105])
+    skewed = np.array([370, 10, 10, 10])
+    s_a = objective(balanced, 2.0, 2, th, alpha=0.2)
+    s_b = objective(skewed, 2.0, 2, th, alpha=0.2)
+    s_c = objective(balanced, 0.05, 2, th, alpha=0.2)
+    assert s_a > s_b and s_a > s_c
+
+
+def test_overflow_penalty_with_fixed_sigma():
+    """The (1+o) factor: same fill-factor std, more overflowed children →
+    lower score.  (Perfectly balanced overflow has σ_F = 0 and is excluded
+    by the Eq. 3 λ-band instead — tested in test_lambda_range_matches_eq3.)"""
+    th = 100
+    a = np.array([50.0, 150.0, 100.0, 100.0])        # std 35.36, o = 0.25
+    sd = a.std()
+    b = np.array([100 - sd, 100 + sd, 100 - sd, 100 + sd])  # same std, o = 0.5
+    s_a = objective(a, 0.0, 2, th, alpha=0.2)
+    s_b = objective(b, 0.0, 2, th, alpha=0.2)
+    assert abs(a.std() - b.std()) < 1e-9
+    assert s_a > s_b
+
+
+def test_eq3_band_excludes_overflowing_small_fanout():
+    """A 600-per-child λ=1 split (avg fill 6×th) violates F_r and is outside
+    the admissible λ band for c_n = 1200, th = 100."""
+    lo, hi = lambda_range(1200, 100, 0.5, 3.0, 16)
+    assert lo >= 2                                    # λ=1 inadmissible
