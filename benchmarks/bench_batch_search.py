@@ -1,0 +1,81 @@
+"""Batched device-resident search throughput (ROADMAP: serving scale).
+
+Measures queries/second of the batched exact path
+(``exact_search_device_batch``) against looping the single-query
+``exact_search_device``, plus the batched approximate path, at several batch
+sizes.  Steady-state numbers: each configuration is warmed once so XLA
+compilation is excluded (the serving regime — programs are compiled at index
+load, not per request).
+
+Emits ``BENCH_batch_search.json`` next to the repo root (machine-readable, so
+future PRs can track QPS regressions) and returns the usual benchmark rows.
+
+    PYTHONPATH=src python -m benchmarks.bench_batch_search
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.index import DumpyIndex
+from repro.core.search_device import (approximate_search_device_batch,
+                                      exact_search_device,
+                                      exact_search_device_batch)
+from repro.data.series import random_walks
+from . import common
+
+BATCHES = (8, 64)
+K = 10
+OUT_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_batch_search.json")
+
+
+def _time(fn, repeat: int = 3) -> float:
+    fn()                                # warmup: compile + caches
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        fn()
+    return (time.perf_counter() - t0) / repeat
+
+
+def run(n: int = common.N_SERIES, length: int = common.LENGTH,
+        out_json: str = OUT_JSON) -> list[tuple[str, float, str]]:
+    db = common.dataset("rand", n=n, length=length)
+    idx = DumpyIndex.build(db, common.params())
+    rows: list[tuple[str, float, str]] = []
+    record: dict = {"n_series": n, "length": length, "k": K,
+                    "n_leaves": int(idx.flat.n_leaves), "batches": {}}
+
+    for B in BATCHES:
+        qs = random_walks(B, length, seed=9000 + B)
+
+        t_loop = _time(lambda: [exact_search_device(idx, q, K) for q in qs],
+                       repeat=1)
+        t_batch = _time(lambda: exact_search_device_batch(idx, qs, K))
+        t_approx = _time(lambda: approximate_search_device_batch(idx, qs, K))
+
+        qps_loop = B / t_loop
+        qps_batch = B / t_batch
+        qps_approx = B / t_approx
+        speedup = qps_batch / qps_loop
+        record["batches"][str(B)] = {
+            "qps_exact_loop": qps_loop, "qps_exact_batch": qps_batch,
+            "qps_approx_batch": qps_approx, "exact_speedup": speedup,
+        }
+        rows.append((f"batch_search/exact_loop/B{B}", qps_loop, "qps"))
+        rows.append((f"batch_search/exact_batch/B{B}", qps_batch,
+                     f"qps;speedup={speedup:.1f}x"))
+        rows.append((f"batch_search/approx_batch/B{B}", qps_approx, "qps"))
+
+    with open(out_json, "w") as fh:
+        json.dump(record, fh, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, note in run():
+        print(f"{name:40s} {val:12.1f} {note}")
+    print(f"wrote {OUT_JSON}")

@@ -43,6 +43,86 @@ class FlatLeaves:
         return self.order[self.leaf_offsets[leaf_id]:self.leaf_offsets[leaf_id + 1]]
 
 
+@dataclasses.dataclass
+class FlatRouting:
+    """Device-side flattening of the host routing tree (DESIGN.md §2).
+
+    The dict-walk descent of ``approximate_search`` becomes array lookups so a
+    whole query batch descends root→leaf in lockstep (one fori_loop step per
+    tree level).  Internal nodes are numbered 0..M-1 (root = 0); their sid →
+    child tables are concatenated into one edge list grouped by parent, in the
+    host dict's insertion order — ``argmin`` tie-breaking on the empty-region
+    fallback then matches ``min()`` over ``children.values()`` exactly.
+    """
+    node_csl: np.ndarray      # [M, lam_max] int32 chosen segments, -1 padded
+    node_shift: np.ndarray    # [M, lam_max] int32 next-bit shift (b-1-card)
+    node_lam: np.ndarray      # [M] int32 split arity in bits
+    edge_parent: np.ndarray   # [E] int32 internal node owning the entry
+    edge_sid: np.ndarray      # [E] int64 routing key under the parent's split
+    edge_leaf: np.ndarray     # [E] int32 leaf_id, or -1 for internal children
+    edge_child: np.ndarray    # [E] int32 internal node id, or -1 for leaves
+    edge_lo: np.ndarray       # [E, w] float32 child region bounds (clamped)
+    edge_hi: np.ndarray       # [E, w] float32
+    depth: int                # max #descent steps to reach any leaf
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.node_lam)
+
+
+def flatten_routing(root: TreeNode, b: int) -> FlatRouting:
+    """Assign internal-node ids breadth-first and emit the edge table.
+
+    Requires leaf ids already assigned by :func:`flatten_tree`.
+    """
+    internal: list[TreeNode] = []
+    ids: dict[int, int] = {}
+    queue = [root] if not root.is_leaf else []
+    while queue:
+        node = queue.pop(0)
+        if id(node) in ids:
+            continue
+        ids[id(node)] = len(internal)
+        internal.append(node)
+        seen: set[int] = set()
+        for child in node.children.values():
+            if not child.is_leaf and id(child) not in seen:
+                seen.add(id(child))
+                queue.append(child)
+
+    M = len(internal)
+    w = root.sym.shape[0]
+    lam_max = max((len(n.csl) for n in internal), default=1)
+    node_csl = np.full((M, lam_max), -1, np.int32)
+    node_shift = np.zeros((M, lam_max), np.int32)
+    node_lam = np.zeros(M, np.int32)
+    ep, es, el, ec, lo_rows, hi_rows = [], [], [], [], [], []
+    depth = 0
+    for m, node in enumerate(internal):
+        node_lam[m] = len(node.csl)
+        for pos, seg in enumerate(node.csl):
+            node_csl[m, pos] = seg
+            node_shift[m, pos] = b - 1 - int(node.card[seg])
+        for sid, child in node.children.items():
+            tgt = node.routing.get(sid) or child
+            ep.append(m)
+            es.append(int(sid))
+            el.append(int(tgt.leaf_id) if tgt.is_leaf else -1)
+            ec.append(-1 if tgt.is_leaf else ids[id(tgt)])
+            lo, hi = node_bounds_np(tgt.sym[None, :], tgt.card[None, :], b)
+            lo_rows.append(lo[0])
+            hi_rows.append(hi[0])
+        depth = max(depth, node.depth + 1)
+    E = len(ep)
+    return FlatRouting(
+        node_csl, node_shift, node_lam,
+        np.asarray(ep, np.int32), np.asarray(es, np.int64),
+        np.asarray(el, np.int32), np.asarray(ec, np.int32),
+        (np.stack(lo_rows) if E else np.zeros((0, w), np.float32)),
+        (np.stack(hi_rows) if E else np.zeros((0, w), np.float32)),
+        max(depth, 1))
+
+
 def flatten_tree(root: TreeNode, b: int) -> FlatLeaves:
     leaves = collect_leaves(root)
     L = len(leaves)
@@ -81,6 +161,8 @@ class DumpyIndex:
         self.alive = np.ones(db.shape[0], bool)
         self.db_ordered = db[flat.order]
         self._pending: list[np.ndarray] = []   # §5.6 insertion buffer
+        self._routing_flat: FlatRouting | None = None
+        self._win_cache: dict = {}             # chunk → window schedule
 
     # -- construction --------------------------------------------------------
     @classmethod
@@ -162,6 +244,16 @@ class DumpyIndex:
     def _refresh_flat(self) -> None:
         self.flat = flatten_tree(self.root, self.params.sax.b)
         self.db_ordered = self.db[self.flat.order]
+        self._routing_flat = None
+        self._win_cache.clear()
+
+    @property
+    def routing_flat(self) -> FlatRouting:
+        """Flat routing tables for the device descent (built lazily; leaf ids
+        must come from the current ``flat`` layout, hence after flatten_tree)."""
+        if self._routing_flat is None:
+            self._routing_flat = flatten_routing(self.root, self.params.sax.b)
+        return self._routing_flat
 
     # -- serialization ---------------------------------------------------------
     def save(self, path: str) -> None:

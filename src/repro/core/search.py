@@ -82,11 +82,12 @@ def _node_lb(node: TreeNode, paa_q: np.ndarray, n: int, b: int) -> float:
 # approximate search — one target leaf (paper §5.5)
 # ---------------------------------------------------------------------------
 
-def approximate_search(index: DumpyIndex, q: np.ndarray, k: int,
-                       metric: str = "ed") -> tuple[np.ndarray, np.ndarray, SearchStats]:
-    paa_q, sax_q = _encode_query(index, q)
+def route_to_leaf(index: DumpyIndex, paa_q: np.ndarray,
+                  sax_q: np.ndarray) -> TreeNode:
+    """Root→leaf descent of one query (paper §5.5).  Empty regions fall back
+    to the most promising existing child by node MINDIST.  This is the host
+    reference for the vectorized descent in ``search_device``."""
     b, n = index.params.sax.b, index.n
-    band = max(1, int(0.1 * n))
     node = index.root
     while not node.is_leaf:
         sid = node.route_sid(sax_q, b)
@@ -95,6 +96,15 @@ def approximate_search(index: DumpyIndex, q: np.ndarray, k: int,
             child = min(node.children.values(),
                         key=lambda c: _node_lb(c, paa_q, n, b))
         node = child
+    return node
+
+
+def approximate_search(index: DumpyIndex, q: np.ndarray, k: int,
+                       metric: str = "ed") -> tuple[np.ndarray, np.ndarray, SearchStats]:
+    paa_q, sax_q = _encode_query(index, q)
+    n = index.n
+    band = max(1, int(0.1 * n))
+    node = route_to_leaf(index, paa_q, sax_q)
     ids, xs = _leaf_candidates(index, node.leaf_id)
     heap: list = []
     _merge_topk(heap, ids, _dists(q, xs, metric, band), index.alive, k)

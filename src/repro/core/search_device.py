@@ -17,6 +17,25 @@ are covered by subsequent windows of the same leaf — handled by iterating
 windows, not leaves).  Early termination carries over windows because window
 LB = its leaf's LB.
 
+Batched multi-query search (the serving path, DumpyOS/MESSI-style) extends
+the same plan to ``Q`` queries in one program:
+
+* queries are batch-encoded (``sax_encode_jnp`` / the Pallas encoder) and the
+  full ``[Q, n_leaves]`` squared-MINDIST table is computed up front
+  (``kernels.ops.lb_isax``);
+* one *shared* window schedule is ordered by the min-over-queries LB; a
+  ``lax.while_loop`` walks it once while every query keeps a private active
+  mask — per-query early termination uses the *suffix minimum* of its LBs
+  along the shared order (exact: a query may stop merging iff every remaining
+  window is prunable for it);
+* the ``[Q, chunk]`` distance tile per iteration is the MXU-form
+  ``|q|²+|x|²-2qx`` (``ed2_batch_jnp`` — same math as ``kernels/pairwise_l2``)
+  and the running top-k merge is fused (``kernels.ops.topk_merge``).
+
+Approximate search is batched by flattening the host routing tree into
+arrays (``DumpyIndex.routing_flat``) so the root→leaf dict-walk becomes a
+vectorized ``fori_loop`` descent over the whole query batch.
+
 Used by tests as a cross-check of the host search and by the serving path
 when the whole collection is device-resident.
 """
@@ -29,11 +48,142 @@ import jax
 import jax.numpy as jnp
 
 from .index import DumpyIndex
-from .sax import sax_encode_np
+from .lb import ed2_batch_jnp, mindist_paa_bounds_np
+from .sax import sax_encode_jnp, sax_encode_np
+from repro.kernels import ops
 
+
+# ---------------------------------------------------------------------------
+# shared window schedule (host, cached on the index)
+# ---------------------------------------------------------------------------
+
+def _window_schedule(index: DumpyIndex, chunk: int):
+    """Split each leaf pack into fixed-size windows (host, tiny; cached on the
+    index and invalidated by updates).  Returns device arrays
+    ``(win_start, win_lead, win_size, win_leaf)`` in leaf order — callers
+    reorder by their own LB schedule."""
+    cached = index._win_cache.get(chunk)
+    if cached is not None:
+        return cached
+    offs = index.flat.leaf_offsets
+    total = int(offs[-1])
+    chunk_eff = max(min(chunk, total), 1)   # collections smaller than a chunk
+    starts, leads, sizes, leaves = [], [], [], []
+    for lid in range(index.flat.n_leaves):
+        s, e = int(offs[lid]), int(offs[lid + 1])
+        for w0 in range(s, e, chunk_eff):
+            # clamp the slice start so dynamic_slice never goes OOB; the
+            # shifted prefix is masked out via `lead` (no double scanning)
+            st = min(w0, max(total - chunk_eff, 0))
+            starts.append(st)
+            leads.append(w0 - st)
+            sizes.append(min(e - w0, chunk_eff))
+            leaves.append(lid)
+    sched = (jnp.asarray(np.asarray(starts, np.int32)),
+             jnp.asarray(np.asarray(leads, np.int32)),
+             jnp.asarray(np.asarray(sizes, np.int32)),
+             np.asarray(leaves, np.int64), chunk_eff)
+    index._win_cache[chunk] = sched
+    return sched
+
+
+def _span_schedule(index: DumpyIndex, chunk: int):
+    """Leaf-agnostic window schedule for the *batched* path: fixed
+    ``chunk``-size spans tiling the ordered collection, plus the
+    (leaf, span)-intersection edge list.  A span's LB for a query is the min
+    MINDIST over the leaves it overlaps (computed on device by segment-min),
+    so pruning stays exact while every loop iteration feeds the MXU a full
+    ``[Q, chunk]`` tile — leaves are far smaller than a chunk, and per-leaf
+    windows would waste most of each tile on masking."""
+    key = ("span", chunk)
+    cached = index._win_cache.get(key)
+    if cached is not None:
+        return cached
+    offs = index.flat.leaf_offsets
+    total = int(offs[-1])
+    chunk_eff = max(min(chunk, total), 1)
+    starts, leads, sizes = [], [], []
+    edge_leaf, edge_win = [], []
+    for wi, w0 in enumerate(range(0, total, chunk_eff)):
+        st = min(w0, max(total - chunk_eff, 0))
+        size = min(total - w0, chunk_eff)
+        starts.append(st)
+        leads.append(w0 - st)
+        sizes.append(size)
+        la = int(np.searchsorted(offs, w0, side="right")) - 1
+        lb = int(np.searchsorted(offs, w0 + size, side="left"))
+        for lid in range(la, lb):
+            edge_leaf.append(lid)
+            edge_win.append(wi)
+    sched = (jnp.asarray(np.asarray(starts, np.int32)),
+             jnp.asarray(np.asarray(leads, np.int32)),
+             jnp.asarray(np.asarray(sizes, np.int32)),
+             jnp.asarray(np.asarray(edge_leaf, np.int32)),
+             jnp.asarray(np.asarray(edge_win, np.int32)), chunk_eff)
+    index._win_cache[key] = sched
+    return sched
+
+
+def _result_margin(index: DumpyIndex, k: int) -> int:
+    """Internal top-k margin only when the layout can yield duplicate ids
+    (fuzzy duplication); a margin weakens early termination, so the plain
+    layout searches exactly k.  Tombstones need no margin — deleted rows are
+    masked to +inf on device before the top-k merge."""
+    kk = k
+    if index.stats.n_duplicates > 0:
+        kk = k * (1 + index.params.max_replica)
+    return kk
+
+
+def _host_rerank(index: DumpyIndex, qs: np.ndarray, pos: np.ndarray,
+                 d_dev: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Recompute the k-sized candidate distances with the host ``ed_np``
+    float32 math and re-sort.  The device loop ranks by the MXU-friendly
+    ``|q|²+|x|²-2qx`` form whose rounding can swap near-ties relative to the
+    host's direct-difference sum; re-ranking the tiny result set restores
+    bitwise id/distance parity with ``search.exact_search``.  ``inf`` device
+    distances mark invalid slots and stay ``inf``."""
+    cand = index.db_ordered[pos]                       # [Q, kk, n]
+    diff = cand - qs[:, None, :]
+    d = np.sqrt((diff * diff).sum(axis=-1))
+    d = np.where(np.isinf(d_dev), np.inf, d).astype(np.float32)
+    order = np.argsort(d, axis=1, kind="stable")
+    return (np.take_along_axis(pos, order, axis=1),
+            np.take_along_axis(d, order, axis=1))
+
+
+def _dedup_ids(ids: np.ndarray, d: np.ndarray, k: int,
+               alive: np.ndarray | None = None) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side k-sized fixup shared by the exact and approximate paths:
+    drop -1 sentinels, fuzzy duplicates and (when ``alive`` is given)
+    tombstoned series; pad short results with -1/inf."""
+    keep, seen = [], set()
+    for j in range(len(ids)):
+        i = int(ids[j])
+        if i < 0 or i in seen or (alive is not None and not alive[i]):
+            continue
+        seen.add(i)
+        keep.append(j)
+    keep = np.asarray(keep[:k], int)
+    out_ids = np.full(k, -1, np.int64)
+    out_d = np.full(k, np.inf, np.float32)
+    out_ids[:len(keep)] = ids[keep]
+    out_d[:len(keep)] = d[keep]
+    return out_ids, out_d
+
+
+def _dedup_fixup(index: DumpyIndex, pos: np.ndarray, d: np.ndarray,
+                 k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Ordered positions → original ids, then the shared dedup/pad fixup."""
+    return _dedup_ids(index.flat.order[pos], d, k, alive=index.alive)
+
+
+# ---------------------------------------------------------------------------
+# single query
+# ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("k", "chunk"))
-def _exact_knn_device(q: jax.Array, db_ordered: jax.Array,
+def _exact_knn_device(q: jax.Array, db_ordered: jax.Array, alive_ord: jax.Array,
                       win_start: jax.Array, win_lead: jax.Array,
                       win_size: jax.Array, win_lb: jax.Array,
                       seed_d2: jax.Array, seed_ids: jax.Array, *, k: int,
@@ -57,12 +207,12 @@ def _exact_knn_device(q: jax.Array, db_ordered: jax.Array,
         d2 = ((slab - q[None, :]) ** 2).sum(-1)
         j = jnp.arange(chunk)
         valid = (j >= win_lead[i]) & (j < win_lead[i] + win_size[i])
+        valid &= jax.lax.dynamic_slice(alive_ord, (start,), (chunk,))
         d2 = jnp.where(valid, d2, jnp.inf)
         ids = jnp.clip(start + jnp.arange(chunk), 0, N - 1)
-        alld = jnp.concatenate([topd, d2])
-        alli = jnp.concatenate([topi, ids])
-        neg, sel = jax.lax.top_k(-alld, k)
-        return i + 1, -neg, alli[sel]
+        topd, topi = ops.topk_merge(topd[None], topi[None], d2[None],
+                                    ids[None])
+        return i + 1, topd[0], topi[0]
 
     init = (jnp.int32(0), seed_d2, seed_ids)
     i, topd, topi = jax.lax.while_loop(cond, body, init)
@@ -74,54 +224,282 @@ def exact_search_device(index: DumpyIndex, q: np.ndarray, k: int,
     """Returns (original ids, distances, windows visited)."""
     n = index.n
     paa_q, _ = sax_encode_np(q.reshape(1, -1), index.params.sax)
-    from .lb import mindist_paa_bounds_np
     lb = mindist_paa_bounds_np(paa_q[0], index.flat.leaf_lo,
                                index.flat.leaf_hi, n)
+    lb = lb * lb       # squared: the loop compares against squared top-k
 
-    # windows: split each leaf pack into fixed-size spans (host, tiny)
-    starts, leads, sizes, lbs = [], [], [], []
-    offs = index.flat.leaf_offsets
-    total = offs[-1]
-    for lid in range(index.flat.n_leaves):
-        s, e = int(offs[lid]), int(offs[lid + 1])
-        for w0 in range(s, e, chunk):
-            # clamp the slice start so dynamic_slice never goes OOB; the
-            # shifted prefix is masked out via `lead` (no double scanning)
-            st = min(w0, max(total - chunk, 0))
-            starts.append(st)
-            leads.append(w0 - st)
-            sizes.append(min(e - w0, chunk))
-            lbs.append(lb[lid])
+    win_start, win_lead, win_size, win_leaf, chunk = _window_schedule(index,
+                                                                      chunk)
+    lbs = lb[win_leaf]
     order = np.argsort(lbs, kind="stable")
-    win_start = jnp.asarray(np.asarray(starts)[order], jnp.int32)
-    win_lead = jnp.asarray(np.asarray(leads)[order], jnp.int32)
-    win_size = jnp.asarray(np.asarray(sizes)[order], jnp.int32)
-    win_lb = jnp.asarray(np.asarray(lbs)[order], jnp.float32)
+    order_d = jnp.asarray(order.astype(np.int32))
+    win_lb = jnp.asarray(lbs[order], jnp.float32)
 
-    # internal margin only when the layout can yield duplicate/removed ids
-    # (fuzzy duplication, tombstones); a margin weakens early termination,
-    # so the plain layout searches exactly k
-    kk = k
-    if index.stats.n_duplicates > 0:
-        kk = k * (1 + index.params.max_replica)
-    if not index.alive.all():
-        kk += 8
+    kk = _result_margin(index, k)
     seed_d2 = jnp.full((kk,), jnp.inf, jnp.float32)
     seed_ids = jnp.zeros((kk,), jnp.int32)
     d, pos, visited = _exact_knn_device(
         jnp.asarray(q, jnp.float32), jnp.asarray(index.db_ordered),
-        win_start, win_lead, win_size, win_lb, seed_d2, seed_ids, k=kk,
-        chunk=chunk)
-    pos = np.asarray(pos)
-    ids = index.flat.order[pos]
-    d = np.asarray(d)
-    # dedup fuzzy duplicates / tombstones on host (tiny k-sized fixup)
-    keep, seen = [], set()
-    for j in range(len(ids)):
-        i = int(ids[j])
-        if i in seen or not index.alive[i]:
-            continue
-        seen.add(i)
-        keep.append(j)
-    keep = np.asarray(keep[:k], int)
-    return ids[keep], d[keep], int(visited)
+        jnp.asarray(index.alive[index.flat.order]),
+        win_start[order_d], win_lead[order_d], win_size[order_d], win_lb,
+        seed_d2, seed_ids, k=kk, chunk=chunk)
+    q2 = np.ascontiguousarray(q, np.float32).reshape(1, -1)
+    pos, d = _host_rerank(index, q2, np.asarray(pos)[None], np.asarray(d)[None])
+    ids, d = _dedup_fixup(index, pos[0], d[0], k)
+    valid = ids >= 0
+    return ids[valid], d[valid], int(visited)
+
+
+# ---------------------------------------------------------------------------
+# batched multi-query exact search
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k", "chunk", "n"))
+def _exact_knn_device_batch(paa_q: jax.Array, qs: jax.Array,
+                            db_ordered: jax.Array, alive_ord: jax.Array,
+                            leaf_lo: jax.Array, leaf_hi: jax.Array,
+                            win_start: jax.Array, win_lead: jax.Array,
+                            win_size: jax.Array, edge_leaf: jax.Array,
+                            edge_win: jax.Array, *,
+                            k: int, chunk: int, n: int):
+    """One XLA program: MINDIST table → shared schedule → masked while_loop.
+
+    Early termination is per query: along the shared window order, query q is
+    allowed to stop merging at step i iff ``suffix_min_lb[q, i] >= kth_q`` —
+    every window it has not seen is individually prunable.  The loop exits
+    when that holds for all queries (or windows run out)."""
+    Q = qs.shape[0]
+    N = db_ordered.shape[0]
+    n_win = win_start.shape[0]
+
+    lbq = ops.lb_isax(paa_q, leaf_lo, leaf_hi, n)      # [Q, L] squared
+    # span LB = min over intersecting leaves (exact: it lower-bounds every
+    # series the span contains)
+    win_lb = jax.ops.segment_min(lbq[:, edge_leaf].T, edge_win,
+                                 num_segments=n_win,
+                                 indices_are_sorted=True).T  # [Q, W]
+    # shared schedule: most-promising-for-anyone first
+    order = jnp.argsort(win_lb.min(axis=0))
+    win_start = win_start[order]
+    win_lead = win_lead[order]
+    win_size = win_size[order]
+    win_lb = win_lb[:, order]
+    # suffix min over the shared order (+inf sentinel past the end)
+    suffix = jnp.flip(jax.lax.cummin(jnp.flip(win_lb, 1), axis=1), 1)
+    suffix = jnp.concatenate(
+        [suffix, jnp.full((Q, 1), jnp.inf, jnp.float32)], axis=1)
+
+    def cond(carry):
+        i, topd, topi, visited = carry
+        kth = topd[:, k - 1]
+        return (i < n_win) & jnp.any(suffix[:, i] < kth)
+
+    def body(carry):
+        i, topd, topi, visited = carry
+        start = win_start[i]
+        slab = jax.lax.dynamic_slice(db_ordered, (start, 0),
+                                     (chunk, db_ordered.shape[1]))
+        d2 = ed2_batch_jnp(qs, slab)                         # [Q, chunk] MXU
+        j = jnp.arange(chunk)
+        valid = (j >= win_lead[i]) & (j < win_lead[i] + win_size[i])
+        valid &= jax.lax.dynamic_slice(alive_ord, (start,), (chunk,))
+        kth = topd[:, k - 1]
+        qact = win_lb[:, i] < kth                            # [Q] active mask
+        d2 = jnp.where(valid[None, :] & qact[:, None], d2, jnp.inf)
+        ids = jnp.broadcast_to(jnp.clip(start + j, 0, N - 1)[None, :],
+                               (Q, chunk))
+        topd, topi = ops.topk_merge(topd, topi, d2, ids)
+        return i + 1, topd, topi, visited + qact.astype(jnp.int32)
+
+    init = (jnp.int32(0),
+            jnp.full((Q, k), jnp.inf, jnp.float32),
+            jnp.zeros((Q, k), jnp.int32),
+            jnp.zeros((Q,), jnp.int32))
+    i, topd, topi, visited = jax.lax.while_loop(cond, body, init)
+    return jnp.sqrt(topd), topi, visited, i
+
+
+def exact_search_device_batch(index: DumpyIndex, qs: np.ndarray, k: int,
+                              chunk: int = 2048
+                              ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Batched exact kNN: ``qs [Q, n]`` → ``(ids [Q, k], d [Q, k],
+    windows_visited [Q])``.  Results match ``search.exact_search`` per query
+    (fuzzy duplicates deduplicated, tombstones skipped); short results pad
+    with ``id -1 / d inf``."""
+    qs = np.ascontiguousarray(np.atleast_2d(qs), np.float32)
+    sax = index.params.sax
+    qs_dev = jnp.asarray(qs)
+    paa_q, _ = (ops.sax_encode(qs_dev, sax.w, sax.b)
+                if jax.default_backend() == "tpu"
+                else sax_encode_jnp(qs_dev, sax.w, sax.b))
+
+    win_start, win_lead, win_size, edge_leaf, edge_win, chunk = \
+        _span_schedule(index, chunk)
+    # +8 slack: the loop ranks by the MXU |q|²+|x|²-2qx form, whose f32
+    # cancellation can swap near-ties across the k boundary; the host re-rank
+    # (direct-difference math) then picks the true top-k from the widened set
+    kk = _result_margin(index, k) + 8
+    d, pos, visited, _ = _exact_knn_device_batch(
+        paa_q, qs_dev, jnp.asarray(index.db_ordered),
+        jnp.asarray(index.alive[index.flat.order]),
+        jnp.asarray(index.flat.leaf_lo), jnp.asarray(index.flat.leaf_hi),
+        win_start, win_lead, win_size, edge_leaf, edge_win,
+        k=kk, chunk=chunk, n=index.n)
+    pos, d = _host_rerank(index, qs, np.asarray(pos), np.asarray(d))
+    ids_out = np.full((len(qs), k), -1, np.int64)
+    d_out = np.full((len(qs), k), np.inf, np.float32)
+    for qi in range(len(qs)):
+        ids_out[qi], d_out[qi] = _dedup_fixup(index, pos[qi], d[qi], k)
+    return ids_out, d_out, np.asarray(visited)
+
+
+# ---------------------------------------------------------------------------
+# batched approximate search (vectorized root→leaf descent)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("depth",))
+def _descend_device(sax_q: jax.Array, node_csl: jax.Array,
+                    node_shift: jax.Array, node_lam: jax.Array,
+                    edge_parent: jax.Array, edge_sid: jax.Array,
+                    edge_leaf: jax.Array, edge_child: jax.Array,
+                    edge_lb: jax.Array, *, depth: int) -> jax.Array:
+    """Lockstep root→leaf routing of a query batch over the flat tables.
+
+    Per level: recompute each query's sid from the current node's chosen
+    segments (promoteiSAX bit extraction), match it against the node's edge
+    span, and fall back to the min-LB child for empty regions — bit-for-bit
+    the host ``search.route_to_leaf`` including argmin tie-breaking."""
+    Q, w = sax_q.shape
+    lam_max = node_csl.shape[1]
+    pos = jnp.arange(lam_max)
+
+    def step(_, carry):
+        cur, leaf = carry                       # [Q]; leaf stays -1 en route
+        active = leaf < 0
+        curc = jnp.clip(cur, 0, node_csl.shape[0] - 1)
+        csl = node_csl[curc]                    # [Q, lam_max]
+        shift = node_shift[curc]
+        lam = node_lam[curc]
+        segs = jnp.clip(csl, 0, w - 1)
+        bits = (jnp.take_along_axis(sax_q, segs, axis=1) >> shift) & 1
+        weights = jnp.where(
+            pos[None, :] < lam[:, None],
+            1 << jnp.maximum(lam[:, None] - 1 - pos[None, :], 0), 0)
+        sid = (bits * weights).sum(axis=1)      # [Q]
+        eligible = edge_parent[None, :] == curc[:, None]          # [Q, E]
+        hit = eligible & (edge_sid[None, :] == sid[:, None])
+        any_hit = hit.any(axis=1)
+        hit_idx = jnp.argmax(hit, axis=1)
+        fb_idx = jnp.argmin(jnp.where(eligible, edge_lb, jnp.inf), axis=1)
+        e = jnp.where(any_hit, hit_idx, fb_idx)
+        nxt_leaf = edge_leaf[e]
+        nxt_cur = edge_child[e]
+        leaf = jnp.where(active, nxt_leaf, leaf)
+        cur = jnp.where(active & (nxt_leaf < 0), nxt_cur, cur)
+        return cur, leaf
+
+    cur = jnp.zeros(Q, jnp.int32)
+    leaf = jnp.full(Q, -1, jnp.int32)
+    _, leaf = jax.lax.fori_loop(0, depth, step, (cur, leaf))
+    return leaf
+
+
+@functools.partial(jax.jit, static_argnames=("k", "lmax", "nbr"))
+def _leaf_topk_device(qs: jax.Array, db_ordered: jax.Array, order: jax.Array,
+                      alive_ord: jax.Array, leaf_offsets: jax.Array,
+                      lbq: jax.Array, routed: jax.Array, *, k: int, lmax: int,
+                      nbr: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Scan the routed leaf (plus the ``nbr-1`` next-best leaves by MINDIST)
+    of every query and return its top-k: ``(ids [Q,k], d2 [Q,k],
+    leaves [Q,nbr])``.  Invalid slots come back as ``id -1 / d2 inf``.
+
+    Leaves are scanned one rank at a time with a fused running top-k merge,
+    so the peak temporary is ``[Q, lmax, n]`` — a monolithic
+    ``[Q, nbr, lmax, n]`` gather would be hundreds of MB per decode step at
+    serving defaults."""
+    Q = qs.shape[0]
+    N = db_ordered.shape[0]
+    # routed leaf first (forced via -inf), then globally next-best leaves
+    scores = lbq.at[jnp.arange(Q), routed].set(-jnp.inf)
+    _, leaves = jax.lax.top_k(-scores, nbr)                  # [Q, nbr]
+    kk = min(k, nbr * lmax)
+
+    def body(j, carry):
+        topd, topi = carry
+        starts = leaf_offsets[leaves[:, j]]                  # [Q]
+        sizes = leaf_offsets[leaves[:, j] + 1] - starts
+        rows = starts[:, None] + jnp.arange(lmax)[None, :]
+        rows_c = jnp.clip(rows, 0, N - 1)                    # [Q, lmax]
+        cand = db_ordered[rows_c]                            # [Q, lmax, n]
+        d2 = ((cand - qs[:, None, :]) ** 2).sum(-1)          # [Q, lmax]
+        valid = (jnp.arange(lmax)[None, :] < sizes[:, None]) \
+            & alive_ord[rows_c]
+        d2 = jnp.where(valid, d2, jnp.inf)
+        ids = jnp.where(valid, order[rows_c], -1)
+        return ops.topk_merge(topd, topi, d2, ids)
+
+    init = (jnp.full((Q, kk), jnp.inf, jnp.float32),
+            jnp.full((Q, kk), -1, jnp.int32))
+    topd, topi = jax.lax.fori_loop(0, nbr, body, init)
+    return topi, topd, leaves
+
+
+def approximate_search_device_batch(index: DumpyIndex, qs: np.ndarray, k: int,
+                                    nbr: int = 1
+                                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Batched approximate kNN (paper §5.5 descent, vectorized over queries).
+
+    ``nbr=1`` visits exactly the leaf the host ``approximate_search`` picks
+    (leaf-selection parity is tested).  ``nbr>1`` widens to the next-best
+    leaves by MINDIST — the serving recall knob; unlike host
+    ``extended_search`` the extras are chosen globally, not within the target
+    subtree.  Returns ``(ids [Q, k'], d [Q, k'], leaves [Q, nbr])`` with
+    ``k' = min(k, nbr·max_leaf_size)``; empty slots are ``id -1 / d inf``.
+    """
+    qs = np.ascontiguousarray(np.atleast_2d(qs), np.float32)
+    sax_p = index.params.sax
+    qs_dev = jnp.asarray(qs)
+    paa_q, sax_q = (ops.sax_encode(qs_dev, sax_p.w, sax_p.b)
+                    if jax.default_backend() == "tpu"
+                    else sax_encode_jnp(qs_dev, sax_p.w, sax_p.b))
+    sax_q = sax_q.astype(jnp.int32)
+
+    lbq = ops.lb_isax(paa_q, jnp.asarray(index.flat.leaf_lo),
+                            jnp.asarray(index.flat.leaf_hi), index.n)
+    rt = index.routing_flat
+    if rt.n_nodes == 0:          # degenerate tree: the root is the only leaf
+        routed = jnp.zeros(len(qs), jnp.int32)
+    else:
+        edge_lb = ops.lb_isax(paa_q, jnp.asarray(rt.edge_lo),
+                                    jnp.asarray(rt.edge_hi), index.n)
+        routed = _descend_device(
+            sax_q, jnp.asarray(rt.node_csl), jnp.asarray(rt.node_shift),
+            jnp.asarray(rt.node_lam), jnp.asarray(rt.edge_parent),
+            jnp.asarray(rt.edge_sid.astype(np.int32)),
+            jnp.asarray(rt.edge_leaf), jnp.asarray(rt.edge_child),
+            edge_lb, depth=rt.depth)
+
+    nbr = min(nbr, index.flat.n_leaves)
+    lmax = int(np.diff(index.flat.leaf_offsets).max())
+    # fuzzy replicas can share a leaf (sibling packing merges them), so fetch
+    # with the duplicate margin and dedup per row on host, like the exact path
+    kk = _result_margin(index, k)
+    ids, d2, leaves = _leaf_topk_device(
+        qs_dev, jnp.asarray(index.db_ordered),
+        jnp.asarray(index.flat.order.astype(np.int32)),
+        jnp.asarray(index.alive[index.flat.order]),
+        jnp.asarray(index.flat.leaf_offsets.astype(np.int32)),
+        lbq, routed, k=kk, lmax=lmax, nbr=nbr)
+    ids = np.asarray(ids).astype(np.int64)
+    d = np.sqrt(np.asarray(d2))
+    k_out = min(k, ids.shape[1])
+    if index.stats.n_duplicates > 0:
+        out_ids = np.full((len(ids), k_out), -1, np.int64)
+        out_d = np.full((len(ids), k_out), np.inf, np.float32)
+        for qi in range(len(ids)):
+            # alive filtering already happened on device; only dedup here
+            out_ids[qi], out_d[qi] = _dedup_ids(ids[qi], d[qi], k_out)
+        ids, d = out_ids, out_d
+    else:
+        ids, d = ids[:, :k_out], d[:, :k_out]
+    return ids, d, np.asarray(leaves)

@@ -30,8 +30,15 @@ def pairwise_l2(q: jax.Array, x: jax.Array) -> jax.Array:
 
 
 def lb_isax(paa_q: jax.Array, lo: jax.Array, hi: jax.Array, n: int) -> jax.Array:
-    """Squared MINDIST to every leaf pack ``[Q, L]`` (pruning scan)."""
-    return _lb.lb_isax(paa_q, lo, hi, n=n, interpret=_interpret())
+    """Squared MINDIST to every leaf pack ``[Q, L]`` (pruning scan).
+
+    On TPU this is the Pallas kernel; elsewhere the fused-jnp oracle
+    (``mindist_jnp``) — one XLA program beats interpreting the kernel grid in
+    Python on CPU."""
+    if _interpret():
+        from repro.core.lb import mindist_jnp
+        return mindist_jnp(paa_q, lo, hi, n)
+    return _lb.lb_isax(paa_q, lo, hi, n=n, interpret=False)
 
 
 def lb_keogh(x: jax.Array, U: jax.Array, L: jax.Array) -> jax.Array:
@@ -45,3 +52,18 @@ def knn_from_leaves(q: jax.Array, db_ordered: jax.Array, k: int) -> tuple[jax.Ar
     d2 = pairwise_l2(q[None, :], db_ordered)[0]
     neg, idx = jax.lax.top_k(-d2, min(k, d2.shape[0]))
     return idx, -neg
+
+
+@jax.jit
+def topk_merge(topd: jax.Array, topi: jax.Array, d2: jax.Array,
+               ids: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Fused per-query top-k merge step of the batched search loop.
+
+    ``topd/topi [Q, k]`` running best (squared dist, id); ``d2 [Q, C]`` new
+    candidate distances with ``ids [Q, C]``.  Masked-out candidates must
+    arrive as ``+inf``.  Returns the merged ``(topd, topi)``."""
+    k = topd.shape[1]
+    alld = jnp.concatenate([topd, d2], axis=1)
+    alli = jnp.concatenate([topi, ids], axis=1)
+    neg, sel = jax.lax.top_k(-alld, k)
+    return -neg, jnp.take_along_axis(alli, sel, axis=1)

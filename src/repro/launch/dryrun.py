@@ -61,7 +61,7 @@ def count_params_split(cfg) -> tuple[float, float]:
     from repro.models.common import PSpec
     specs = tfm.init_specs(cfg)
     total = active = 0.0
-    flat = jax.tree.flatten_with_path(
+    flat = jax.tree_util.tree_flatten_with_path(
         specs, is_leaf=lambda x: isinstance(x, PSpec))[0]
     for path, spec in flat:
         n = float(np.prod(spec.shape))

@@ -370,6 +370,24 @@ def block_apply(kind: str, p: dict, x: jax.Array, ctx: Ctx,
 # stack driver
 # ---------------------------------------------------------------------------
 
+@jax.custom_vjp
+def _carry_barrier(x: jax.Array) -> jax.Array:
+    return jax.lax.optimization_barrier(x)
+
+
+def _carry_barrier_fwd(x):
+    return jax.lax.optimization_barrier(x), None
+
+
+def _carry_barrier_bwd(_, g):
+    # identity cotangent: optimization_barrier has no differentiation rule on
+    # JAX 0.4.37, and the barrier is a scheduling hint — the math is identity
+    return (g,)
+
+
+_carry_barrier.defvjp(_carry_barrier_fwd, _carry_barrier_bwd)
+
+
 def _remat_policy(cfg: ArchConfig):
     if cfg.remat == "none":
         return None
@@ -388,7 +406,7 @@ def _run_stack(params: dict, x: jax.Array, ctx: Ctx,
             # barrier: stops XLA hoisting a convert of the whole remat-saved
             # carry stack out of the backward loop (a full-stack f32 copy —
             # observed 2x memory on the CPU pipeline; see EXPERIMENTS.md §Perf)
-            x = jax.lax.optimization_barrier(x)
+            x = _carry_barrier(x)
         new_cache = {}
         for i, kind in enumerate(pat):
             c = None if unit_cache is None else unit_cache[f"b{i}"]

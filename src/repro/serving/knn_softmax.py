@@ -23,6 +23,7 @@ from repro.core.build import DumpyParams
 from repro.core.index import DumpyIndex
 from repro.core.sax import SaxParams
 from repro.core.search import extended_search
+from repro.core.search_device import approximate_search_device_batch
 from repro.core.split import SplitParams
 from repro.data.series import pad_to_multiple, z_normalize
 
@@ -89,3 +90,41 @@ class KnnSoftmaxHead:
             self.stats.exact_in_topr += int(exact in set(int(c) for c in cand))
             self.stats.agree_argmax += int(exact == tok)
         return tok
+
+    # -- batched serving path (device-resident search) -----------------------
+
+    def _encode_queries(self, H: np.ndarray) -> np.ndarray:
+        """Apply the MIPS augmentation + index isometry to a batch of hidden
+        states ``H [B, d_model]``."""
+        H = np.atleast_2d(np.asarray(H, np.float32))
+        q = np.concatenate([H, np.zeros((len(H), 1), np.float32)], axis=1)
+        q = (q - self.mu) / self.sd
+        return np.pad(q, ((0, 0), (0, self.pad))).astype(np.float32)
+
+    def candidates_batch(self, H: np.ndarray) -> np.ndarray:
+        """Top-R candidate ids for a whole decode batch in one device program
+        (vectorized root→leaf descent + fused leaf scan).  The recall knob is
+        ``nbr_nodes``, as in the host path; extra leaves are the globally
+        next-best by MINDIST rather than subtree siblings.  Returns
+        ``[B, R'] int64`` with -1 padding where a batch row found fewer."""
+        ids, _, _ = approximate_search_device_batch(
+            self.index, self._encode_queries(H), self.r, nbr=self.nbr)
+        return ids
+
+    def step_batch(self, H: np.ndarray,
+                   track_exact: bool = True) -> np.ndarray:
+        """Batched ``step``: one token id per row of ``H [B, d_model]``."""
+        H = np.atleast_2d(np.asarray(H, np.float32))
+        cand = self.candidates_batch(H)                      # [B, R']
+        logits = np.einsum("bd,dbr->br", H,
+                           self.lm_head[:, np.maximum(cand, 0)])
+        logits = np.where(cand >= 0, logits, -np.inf)
+        toks = cand[np.arange(len(H)), np.argmax(logits, axis=1)]
+        if track_exact:
+            full = H @ self.lm_head                          # [B, vocab]
+            exact = np.argmax(full, axis=1)
+            self.stats.tokens += len(H)
+            self.stats.exact_in_topr += int(
+                ((cand == exact[:, None]) & (cand >= 0)).any(axis=1).sum())
+            self.stats.agree_argmax += int((exact == toks).sum())
+        return toks.astype(np.int64)

@@ -1,0 +1,184 @@
+"""Parity tests for the batched device-resident search paths.
+
+Batched exact must reproduce the host ``exact_search`` ids/distances per
+query (including fuzzy-duplicate and tombstone layouts); batched approximate
+must route every query to exactly the leaf the host descent picks.
+"""
+import numpy as np
+import pytest
+from _propcheck import given, settings, st
+
+from repro.core.baselines.brute import brute_force_knn
+from repro.core.build import DumpyParams
+from repro.core.index import DumpyIndex
+from repro.core.sax import SaxParams
+from repro.core.search import (_encode_query, approximate_search,
+                               exact_search, route_to_leaf)
+from repro.core.search_device import (approximate_search_device_batch,
+                                      exact_search_device,
+                                      exact_search_device_batch)
+from repro.core.split import SplitParams
+from repro.data.series import random_walks
+
+PARAMS = DumpyParams(sax=SaxParams(w=8, b=8), split=SplitParams(th=128))
+FUZZY = DumpyParams(sax=SaxParams(w=8, b=8), split=SplitParams(th=128),
+                    fuzzy_f=0.15)
+
+
+@pytest.fixture(scope="module")
+def built():
+    db = random_walks(4000, 64, seed=0)
+    return db, DumpyIndex.build(db, PARAMS)
+
+
+@pytest.fixture(scope="module")
+def built_fuzzy():
+    db = random_walks(2500, 64, seed=2)
+    return db, DumpyIndex.build(db, FUZZY)
+
+
+def _assert_exact_parity(idx, qs, k):
+    ids, d, visited = exact_search_device_batch(idx, qs, k)
+    for i, q in enumerate(qs):
+        h_ids, h_d, _ = exact_search(idx, q, k)
+        got = ids[i][ids[i] >= 0]
+        np.testing.assert_array_equal(got, h_ids)
+        np.testing.assert_allclose(d[i][:len(h_d)], h_d, atol=1e-3)
+    return visited
+
+
+def test_batched_exact_matches_host(built):
+    db, idx = built
+    qs = random_walks(16, 64, seed=31)
+    _assert_exact_parity(idx, qs, 10)
+
+
+def test_batched_exact_matches_brute_force(built):
+    db, idx = built
+    qs = random_walks(8, 64, seed=77)
+    ids, d, _ = exact_search_device_batch(idx, qs, 10)
+    for i, q in enumerate(qs):
+        gt_ids, gt_d = brute_force_knn(db, q, 10)
+        np.testing.assert_allclose(np.sort(d[i]), np.sort(gt_d), atol=1e-3)
+
+
+def test_batched_exact_fuzzy_duplicates(built_fuzzy):
+    db, idx = built_fuzzy
+    assert idx.stats.n_duplicates > 0
+    qs = random_walks(8, 64, seed=13)
+    _assert_exact_parity(idx, qs, 10)
+    ids, _, _ = exact_search_device_batch(idx, qs, 10)
+    for row in ids:
+        assert len(np.unique(row)) == len(row)          # dedup worked
+
+
+def test_batched_exact_tombstones(built_fuzzy):
+    db, idx = built_fuzzy
+    qs = random_walks(6, 64, seed=21)
+    ids, _, _ = exact_search_device_batch(idx, qs, 5)
+    victims = [int(v) for v in ids[0][:3]]
+    for v in victims:
+        idx.delete(v)
+    try:
+        ids2, _, _ = exact_search_device_batch(idx, qs, 5)
+        assert not any(v in ids2[0] for v in victims)
+        _assert_exact_parity(idx, qs, 5)
+    finally:
+        for v in victims:                                # restore for others
+            idx.alive[v] = True
+
+
+def test_batched_exact_batch_of_one_equals_single(built):
+    db, idx = built
+    q = random_walks(1, 64, seed=5)
+    ids_b, d_b, _ = exact_search_device_batch(idx, q, 10)
+    ids_s, d_s, _ = exact_search_device(idx, q[0], 10)
+    np.testing.assert_array_equal(ids_b[0][ids_b[0] >= 0], ids_s)
+    np.testing.assert_allclose(d_b[0][:len(d_s)], d_s, atol=1e-4)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=5, deadline=None)
+def test_batched_exact_random_batches(seed):
+    db = random_walks(1500, 64, seed=3)
+    idx = DumpyIndex.build(db, PARAMS)
+    qs = random_walks(4, 64, seed=60_000 + seed)
+    _assert_exact_parity(idx, qs, 10)
+
+
+def test_batched_approx_leaf_selection_matches_host(built):
+    db, idx = built
+    qs = random_walks(32, 64, seed=44)
+    _, _, leaves = approximate_search_device_batch(idx, qs, 10)
+    for i, q in enumerate(qs):
+        paa_q, sax_q = _encode_query(idx, q)
+        node = route_to_leaf(idx, paa_q, sax_q)
+        assert leaves[i, 0] == node.leaf_id
+
+
+def test_batched_approx_results_match_host_loop(built):
+    db, idx = built
+    qs = random_walks(12, 64, seed=91)
+    ids, d, _ = approximate_search_device_batch(idx, qs, 10)
+    for i, q in enumerate(qs):
+        h_ids, h_d, _ = approximate_search(idx, q, 10)
+        got = ids[i][ids[i] >= 0][:len(h_ids)]
+        np.testing.assert_array_equal(got, h_ids)
+        np.testing.assert_allclose(d[i][:len(h_d)], h_d, atol=1e-3)
+
+
+def test_batched_approx_fuzzy_duplicates_deduped(built_fuzzy):
+    """Fuzzy replicas can share a pack leaf, so the batched approximate path
+    must dedup ids per row and still match the host loop."""
+    db, idx = built_fuzzy
+    qs = random_walks(16, 64, seed=67)
+    for nbr in (1, 4):
+        ids, d, _ = approximate_search_device_batch(idx, qs, 10, nbr=nbr)
+        for row in ids:
+            got = row[row >= 0]
+            assert len(np.unique(got)) == len(got)
+    ids, d, _ = approximate_search_device_batch(idx, qs, 10)
+    for i, q in enumerate(qs):
+        h_ids, h_d, _ = approximate_search(idx, q, 10)
+        got = ids[i][ids[i] >= 0][:len(h_ids)]
+        np.testing.assert_array_equal(got, h_ids)
+        np.testing.assert_allclose(d[i][:len(h_d)], h_d, atol=1e-3)
+
+
+def test_batched_approx_empty_region_fallback(built):
+    """Adversarial queries (far outside the data distribution) hit empty
+    routing regions; the device fallback must still match the host descent."""
+    db, idx = built
+    qs = 4.0 * random_walks(8, 64, seed=101) + 3.0
+    _, _, leaves = approximate_search_device_batch(idx, qs, 5)
+    for i, q in enumerate(qs):
+        paa_q, sax_q = _encode_query(idx, q)
+        node = route_to_leaf(idx, paa_q, sax_q)
+        assert leaves[i, 0] == node.leaf_id
+
+
+def test_batched_approx_nbr_widens_coverage(built):
+    db, idx = built
+    qs = random_walks(6, 64, seed=55)
+    ids1, _, leaves1 = approximate_search_device_batch(idx, qs, 10, nbr=1)
+    ids4, _, leaves4 = approximate_search_device_batch(idx, qs, 10, nbr=4)
+    assert leaves4.shape == (6, 4)
+    np.testing.assert_array_equal(leaves1[:, 0], leaves4[:, 0])
+    gt = [set(brute_force_knn(db, q, 10)[0].tolist()) for q in qs]
+    r1 = np.mean([len(gt[i] & set(ids1[i].tolist())) for i in range(6)])
+    r4 = np.mean([len(gt[i] & set(ids4[i].tolist())) for i in range(6)])
+    assert r4 >= r1                                      # recall only improves
+
+
+def test_batched_serving_head_matches_looped_candidates():
+    from repro.serving.knn_softmax import KnnSoftmaxHead
+    rng = np.random.default_rng(7)
+    W = rng.standard_normal((32, 1024)).astype(np.float32)
+    head = KnnSoftmaxHead(W, w=8, th=128, r_candidates=128, nbr_nodes=4)
+    H = W[:, rng.integers(1024, size=16)].T \
+        + 0.1 * rng.standard_normal((16, 32)).astype(np.float32)
+    toks = head.step_batch(H)
+    assert toks.shape == (16,)
+    s = head.stats
+    assert s.tokens == 16
+    assert s.exact_in_topr / s.tokens >= 0.5

@@ -19,7 +19,7 @@ from repro.core.split import SplitParams
 from repro.data.series import random_walks
 from repro.distributed import hlo_cost
 from repro.distributed.sharding import (DEFAULT_RULES, logical_rules,
-                                        logical_spec, shard)
+                                        logical_spec, make_mesh, shard)
 
 PARAMS = DumpyParams(sax=SaxParams(w=8, b=8), split=SplitParams(th=128))
 
@@ -50,8 +50,7 @@ def test_sharding_rules_resolution_no_mesh_is_noop():
 
 
 def test_sharding_rules_drop_conflicts_and_missing_axes():
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("model",))
     with logical_rules(mesh, DEFAULT_RULES):
         spec = logical_spec(("heads", "mlp"))       # both map to 'model'
         # second use of the same mesh axis must be dropped
@@ -88,14 +87,14 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 import sys
 sys.path.insert(0, "src")
 from repro.configs.base import reduced, RunShape
-from repro.distributed.sharding import logical_rules, shardings_for, DEFAULT_RULES
+from repro.distributed.sharding import (logical_rules, make_mesh,
+                                        shardings_for, DEFAULT_RULES)
 from repro.models import registry, transformer as tfm
 from repro.models.common import logical_tree
 from repro.train import optimizer as opt
 from repro.train.train_step import make_train_step
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((4, 2), ("data", "model"))
 cfg = reduced(registry.get_config("olmo-1b"), vocab=512, d_model=64)
 with logical_rules(mesh, DEFAULT_RULES):
     params_abs = tfm.abstract_params(cfg)
@@ -174,7 +173,8 @@ import sys; sys.path.insert(0, "src")
 import jax, jax.numpy as jnp, numpy as np, json
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.train.checkpoint import CheckpointManager
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.distributed.sharding import make_mesh
+mesh = make_mesh((8,), ("data",))
 target = {{"w": jnp.zeros((8, 8)), "b": jnp.zeros((16,))}}
 shardings = {{"w": NamedSharding(mesh, P("data", None)),
              "b": NamedSharding(mesh, P("data"))}}

@@ -2,7 +2,7 @@
 serialization, and updates (§5.6)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, st
 
 from repro.core.baselines.brute import brute_force_knn
 from repro.core.build import DumpyParams, collect_leaves

@@ -1,8 +1,7 @@
 """Property tests for the lower-bound invariants — the correctness backbone
 of iSAX-family pruning (any violation silently breaks exact search)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
-import hypothesis.extra.numpy as hnp
+from _propcheck import given, settings, st, hnp
 
 from repro.core.lb import (dtw_batch_jnp, dtw_envelope_np, dtw_np, ed_np,
                            envelope_paa_np, mindist_dtw_bounds_np,

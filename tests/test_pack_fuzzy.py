@@ -1,6 +1,6 @@
 """Tests for leaf packing (Algorithm 3) and Dumpy-Fuzzy duplication (§6)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, st
 
 from repro.core.build import DumpyParams
 from repro.core.index import DumpyIndex

@@ -1,8 +1,7 @@
 """Unit + property tests for SAX/iSAX numerics."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-import hypothesis.extra.numpy as hnp
+from _propcheck import given, settings, st, hnp
 
 from repro.core.sax import (SaxParams, breakpoints, breakpoints_ext,
                             extract_bits_np, isax_bounds_np, next_bits_np,

@@ -1,7 +1,7 @@
 """Device-resident (fully-jitted) exact search vs host search & brute force."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, st
 
 from repro.core.baselines.brute import brute_force_knn
 from repro.core.build import DumpyParams

@@ -2,7 +2,7 @@
 import itertools
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, st
 
 from repro.core.sax import region_midpoints
 from repro.core.split import (SplitParams, brute_force_split_plan,

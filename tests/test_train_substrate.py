@@ -87,8 +87,8 @@ def test_compressed_psum_error_feedback_single_device():
     from repro.train.grad_compress import compressed_psum
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("dp",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.distributed.sharding import make_mesh
+    mesh = make_mesh((1,), ("dp",))
     g = {"w": jnp.linspace(-1, 1, 256).reshape(16, 16)}
 
     def f(grads):
