@@ -7,18 +7,24 @@ sizes.  Steady-state numbers: each configuration is warmed once so XLA
 compilation is excluded (the serving regime — programs are compiled at index
 load, not per request).
 
-Emits ``BENCH_batch_search.json`` next to the repo root (machine-readable, so
-future PRs can track QPS regressions) and returns the usual benchmark rows.
+Emits ``BENCH_batch_search.json`` next to the repo root (machine-readable)
+and, when a previous run's file exists, prints the QPS delta against it —
+with a loud warning on any >10% regression — so PRs track throughput drift.
 
-    PYTHONPATH=src python -m benchmarks.bench_batch_search
+    PYTHONPATH=src python -m benchmarks.bench_batch_search            # full
+    PYTHONPATH=src python -m benchmarks.bench_batch_search --quick    # smoke
+
+``--quick`` is a seconds-scale smoke (small collection, batch 8) wired into
+``scripts/verify.sh``; it exercises the full path but does not overwrite the
+committed baseline JSON.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
+import sys
 import time
-
-import numpy as np
 
 from repro.core.index import DumpyIndex
 from repro.core.search_device import (approximate_search_device_batch,
@@ -29,6 +35,7 @@ from . import common
 
 BATCHES = (8, 64)
 K = 10
+REGRESSION_TOL = 0.10           # warn when QPS drops by more than this
 OUT_JSON = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_batch_search.json")
 
@@ -41,15 +48,54 @@ def _time(fn, repeat: int = 3) -> float:
     return (time.perf_counter() - t0) / repeat
 
 
+def _load_previous(out_json: str) -> dict | None:
+    try:
+        with open(out_json) as fh:
+            return json.load(fh)
+    except (OSError, ValueError):
+        return None
+
+
+def _report_deltas(record: dict, prev: dict | None,
+                   rows: list[tuple[str, float, str]]) -> int:
+    """Append QPS-delta rows vs the previous run; returns #regressions."""
+    if not prev or "batches" not in prev:
+        rows.append(("batch_search/delta", 0.0, "no previous baseline"))
+        return 0
+    regressions = 0
+    for B, cur in record["batches"].items():
+        old = prev["batches"].get(B)
+        if not old:
+            continue
+        for key in ("qps_exact_batch", "qps_approx_batch"):
+            if key not in old or not old[key]:
+                continue
+            delta = cur[key] / old[key] - 1.0
+            note = f"{delta:+.1%} vs previous"
+            if delta < -REGRESSION_TOL:
+                regressions += 1
+                note += f"  ** WARNING: >{REGRESSION_TOL:.0%} QPS regression **"
+                print(f"WARNING: {key}/B{B} regressed {delta:+.1%} "
+                      f"({old[key]:.1f} -> {cur[key]:.1f} qps)",
+                      file=sys.stderr)
+            rows.append((f"batch_search/delta/{key}/B{B}",
+                         100.0 * delta, note))
+    return regressions
+
+
 def run(n: int = common.N_SERIES, length: int = common.LENGTH,
-        out_json: str = OUT_JSON) -> list[tuple[str, float, str]]:
+        out_json: str = OUT_JSON, quick: bool = False
+        ) -> list[tuple[str, float, str]]:
+    batches = (8,) if quick else BATCHES
+    if quick:
+        n, length = min(n, 4000), min(length, 64)
     db = common.dataset("rand", n=n, length=length)
     idx = DumpyIndex.build(db, common.params())
     rows: list[tuple[str, float, str]] = []
     record: dict = {"n_series": n, "length": length, "k": K,
                     "n_leaves": int(idx.flat.n_leaves), "batches": {}}
 
-    for B in BATCHES:
+    for B in batches:
         qs = random_walks(B, length, seed=9000 + B)
 
         t_loop = _time(lambda: [exact_search_device(idx, q, K) for q in qs],
@@ -70,12 +116,21 @@ def run(n: int = common.N_SERIES, length: int = common.LENGTH,
                      f"qps;speedup={speedup:.1f}x"))
         rows.append((f"batch_search/approx_batch/B{B}", qps_approx, "qps"))
 
-    with open(out_json, "w") as fh:
-        json.dump(record, fh, indent=1)
+    # quick mode is a smoke run on a smaller problem: deltas vs the committed
+    # full-size baseline would be meaningless, and it must not overwrite it
+    if not quick:
+        _report_deltas(record, _load_previous(out_json), rows)
+        with open(out_json, "w") as fh:
+            json.dump(record, fh, indent=1)
     return rows
 
 
 if __name__ == "__main__":
-    for name, val, note in run():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="seconds-scale smoke run (no baseline update)")
+    args = ap.parse_args()
+    for name, val, note in run(quick=args.quick):
         print(f"{name:40s} {val:12.1f} {note}")
-    print(f"wrote {OUT_JSON}")
+    if not args.quick:
+        print(f"wrote {OUT_JSON}")

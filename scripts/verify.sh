@@ -1,6 +1,9 @@
 #!/usr/bin/env bash
-# Tier-1 verification: the full offline test suite (see tests/README.md).
+# Tier-1 verification: the full offline test suite (see tests/README.md),
+# followed by the seconds-scale batched-search benchmark smoke (--quick:
+# exercises the DeviceIndex serving path end-to-end, no baseline update).
 # Usage: scripts/verify.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.bench_batch_search --quick

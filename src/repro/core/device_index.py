@@ -1,0 +1,329 @@
+"""DeviceIndex — every device-side array of a built Dumpy index, as one
+registered pytree (DESIGN.md §2; DumpyOS-style parallel serving).
+
+``DumpyIndex`` keeps the host artifacts (routing tree, numpy flat layout,
+raw collection).  Device state used to be scattered — ad-hoc ``jnp.asarray``
+uploads in ``search_device``, window-schedule caches on the index, a
+separate one-shot plan in ``core/distributed`` — which made the sharded
+search impossible to express.  ``DeviceIndex`` unifies it:
+
+* the ordered collection, tombstone mask and original-id table live in a
+  ``[S, Tp, n]`` *leaf-aligned* shard layout: leaves are partitioned into
+  ``S`` contiguous groups cut only at leaf boundaries (so every leaf pack
+  stays contiguous inside one shard) and each shard is padded to the common
+  row count ``Tp`` (pad rows: ``alive=False``, ``id=-1``, zero series);
+* per-shard leaf MINDIST envelopes and the fixed-size span schedule
+  (windows + (leaf, window)-intersection edges) are precomputed so each
+  shard can run the windowed-pruning loop locally;
+* the global leaf table (``leaf_start/size`` in flattened ``S·Tp`` row
+  coordinates, global lo/hi envelopes) and the flattened routing tables
+  serve the batched approximate descent;
+* ``inv_order`` maps an original id to the flattened row of its first
+  replica (fuzzy duplication makes the map one-to-many; the remaining
+  replicas are recoverable from ``ids``).
+
+The pytree registration makes a ``DeviceIndex`` a legal jit argument: array
+fields are children, everything shape-determining is static aux data, so
+searches take the whole index as one argument and retracing only happens
+when the layout actually changes.  ``shard(mesh)`` places the ``[S, ...]``
+fields with ``NamedSharding(mesh, P("data", None, ...))`` (leaf-aligned
+shard boundaries by construction) and replicates the small tables; the
+sharded exact search then runs shard-local loops and merges per-shard top-k
+with an all-gather (see ``search_device.exact_search_device_batch``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import TYPE_CHECKING
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard (index.py builds us)
+    from .index import DumpyIndex
+
+
+# Children of the pytree, in flatten order.  ``_SHARDED_FIELDS`` are the
+# ``[S, ...]`` arrays placed over the data axis; the rest replicate.
+_ARRAY_FIELDS = (
+    "db", "alive", "ids",
+    "leaf_lo", "leaf_hi",
+    "win_start", "win_lead", "win_size", "edge_leaf", "edge_win",
+    "leaf_start", "leaf_size", "leaf_lo_g", "leaf_hi_g", "inv_order",
+    "node_csl", "node_shift", "node_lam",
+    "rt_parent", "rt_sid", "rt_leaf", "rt_child", "rt_lo", "rt_hi",
+)
+_SHARDED_FIELDS = frozenset({
+    "db", "alive", "ids", "leaf_lo", "leaf_hi",
+    "win_start", "win_lead", "win_size", "edge_leaf", "edge_win",
+})
+_META_FIELDS = ("n", "w", "chunk", "depth", "lmax", "total",
+                "has_duplicates", "max_replica", "row_bounds")
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceIndex:
+    # -- sharded over the data axis ([S, ...], leaf-aligned) -----------------
+    db: jax.Array          # [S, Tp, n] f32 ordered collection (zero pad)
+    alive: jax.Array       # [S, Tp] bool tombstone mask (False pad)
+    ids: jax.Array         # [S, Tp] i32 original ids (-1 pad)
+    leaf_lo: jax.Array     # [S, Lp, w] f32 per-shard leaf envelopes (+inf pad)
+    leaf_hi: jax.Array     # [S, Lp, w] f32
+    win_start: jax.Array   # [S, W] i32 span schedule (clamped starts)
+    win_lead: jax.Array    # [S, W] i32 masked prefix of end-clamped spans
+    win_size: jax.Array    # [S, W] i32 live rows per span (0 = pad span)
+    edge_leaf: jax.Array   # [S, E] i32 (local leaf, span) intersections;
+    edge_win: jax.Array    # [S, E] i32 pads point at the +inf pad leaf
+    # -- replicated ----------------------------------------------------------
+    leaf_start: jax.Array  # [L] i32 leaf start in flattened S*Tp coordinates
+    leaf_size: jax.Array   # [L] i32
+    leaf_lo_g: jax.Array   # [L, w] f32 global leaf envelopes
+    leaf_hi_g: jax.Array   # [L, w] f32
+    inv_order: jax.Array   # [N] i32 original id -> first flattened row (-1 dead pad)
+    node_csl: jax.Array    # [M, lam_max] i32 routing: chosen segments
+    node_shift: jax.Array  # [M, lam_max] i32
+    node_lam: jax.Array    # [M] i32
+    rt_parent: jax.Array   # [Eg] i32 routing edge list (grouped by parent)
+    rt_sid: jax.Array      # [Eg] i32
+    rt_leaf: jax.Array     # [Eg] i32
+    rt_child: jax.Array    # [Eg] i32
+    rt_lo: jax.Array       # [Eg, w] f32 child region bounds
+    rt_hi: jax.Array       # [Eg, w] f32
+    # -- static (aux data; part of the jit cache key) ------------------------
+    n: int                 # series length
+    w: int                 # SAX word length
+    chunk: int             # effective span size of the schedule
+    depth: int             # routing descent depth
+    lmax: int              # max leaf size (approximate-path scan width)
+    total: int             # real (unpadded) ordered rows
+    has_duplicates: bool   # fuzzy layout -> top-k needs the replica margin
+    max_replica: int
+    row_bounds: tuple      # S+1 ordered-row cuts (leaf-aligned, host ints)
+
+    # -- shapes --------------------------------------------------------------
+    @property
+    def n_shards(self) -> int:
+        return self.db.shape[0]
+
+    @property
+    def shard_rows(self) -> int:
+        return self.db.shape[1]
+
+    @property
+    def n_leaves(self) -> int:
+        return self.leaf_start.shape[0]
+
+    def replace(self, **kw) -> "DeviceIndex":
+        return dataclasses.replace(self, **kw)
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def from_index(cls, index: "DumpyIndex", chunk: int = 2048,
+                   n_shards: int = 1) -> "DeviceIndex":
+        """Build the full device state from a host ``DumpyIndex``.
+
+        ``n_shards`` fixes the leading axis; the shard boundaries are the
+        leaf boundaries nearest the ideal ``total/S`` cuts, so a leaf never
+        straddles two shards and the span loop needs no cross-shard windows.
+        """
+        flat = index.flat
+        offs = np.asarray(flat.leaf_offsets, np.int64)
+        L = flat.n_leaves
+        total = int(offs[-1])
+        n = index.db.shape[1]
+        w = flat.leaf_lo.shape[1]
+        S = max(int(n_shards), 1)
+
+        # leaf-aligned cuts: the leaf boundary nearest each ideal row split
+        cut_leaf = [0]
+        for s in range(1, S):
+            ideal = s * total / S
+            j = int(np.searchsorted(offs, ideal))
+            if j > 0 and (j > L or ideal - float(offs[j - 1])
+                          < float(offs[j]) - ideal):
+                j -= 1
+            cut_leaf.append(min(max(j, cut_leaf[-1]), L))
+        cut_leaf.append(L)
+        row_bounds = tuple(int(offs[c]) for c in cut_leaf)
+
+        Tp = max(max(row_bounds[s + 1] - row_bounds[s] for s in range(S)), 1)
+        chunk_eff = max(min(int(chunk), Tp), 1)
+        W = math.ceil(Tp / chunk_eff)
+        Lp = max(cut_leaf[s + 1] - cut_leaf[s] for s in range(S)) + 1  # +pad
+
+        db_sh = np.zeros((S, Tp, n), np.float32)
+        alive_sh = np.zeros((S, Tp), bool)
+        ids_sh = np.full((S, Tp), -1, np.int32)
+        lo_sh = np.full((S, Lp, w), np.inf, np.float32)
+        hi_sh = np.full((S, Lp, w), np.inf, np.float32)
+        win_start = np.zeros((S, W), np.int32)
+        win_lead = np.zeros((S, W), np.int32)
+        win_size = np.zeros((S, W), np.int32)
+        edges: list[tuple[list, list]] = []
+
+        order = np.asarray(flat.order, np.int64)
+        alive_ord = index.alive[order]
+        pos_flat = np.empty(total, np.int64)   # ordered row -> flattened row
+        for s in range(S):
+            r0, r1 = row_bounds[s], row_bounds[s + 1]
+            l0, l1 = cut_leaf[s], cut_leaf[s + 1]
+            Ts = r1 - r0
+            db_sh[s, :Ts] = index.db_ordered[r0:r1]
+            alive_sh[s, :Ts] = alive_ord[r0:r1]
+            ids_sh[s, :Ts] = order[r0:r1]
+            lo_sh[s, :l1 - l0] = flat.leaf_lo[l0:l1]
+            hi_sh[s, :l1 - l0] = flat.leaf_hi[l0:l1]
+            pos_flat[r0:r1] = s * Tp + np.arange(Ts)
+            local_offs = offs[l0:l1 + 1] - r0
+            el, ew = [], []
+            for wi, w0 in enumerate(range(0, Tp, chunk_eff)):
+                st = min(w0, max(Tp - chunk_eff, 0))
+                size = min(max(Ts - w0, 0), chunk_eff)
+                win_start[s, wi] = st
+                win_lead[s, wi] = w0 - st
+                win_size[s, wi] = size
+                if size > 0:
+                    la = int(np.searchsorted(local_offs, w0, "right")) - 1
+                    lb = int(np.searchsorted(local_offs, w0 + size, "left"))
+                    for lid in range(max(la, 0), lb):
+                        el.append(lid)
+                        ew.append(wi)
+            edges.append((el, ew))
+
+        # pad edges aim at the +inf pad leaf / the last span: segment-min
+        # treats them as no-ops, and edge_win stays sorted
+        E = max(max(len(el) for el, _ in edges), 1)
+        edge_leaf = np.full((S, E), Lp - 1, np.int32)
+        edge_win = np.full((S, E), W - 1, np.int32)
+        for s, (el, ew) in enumerate(edges):
+            edge_leaf[s, :len(el)] = el
+            edge_win[s, :len(ew)] = ew
+
+        leaf_start = np.zeros(max(L, 1), np.int32)
+        for s in range(S):
+            l0, l1 = cut_leaf[s], cut_leaf[s + 1]
+            leaf_start[l0:l1] = s * Tp + (offs[l0:l1] - row_bounds[s])
+        leaf_size = np.diff(offs).astype(np.int32) if L else np.ones(1, np.int32)
+
+        inv = np.full(index.db.shape[0], -1, np.int64)
+        inv[order[::-1]] = pos_flat[::-1]       # first replica wins
+
+        rt = index.routing_flat
+        dev = cls(
+            db=jnp.asarray(db_sh), alive=jnp.asarray(alive_sh),
+            ids=jnp.asarray(ids_sh),
+            leaf_lo=jnp.asarray(lo_sh), leaf_hi=jnp.asarray(hi_sh),
+            win_start=jnp.asarray(win_start), win_lead=jnp.asarray(win_lead),
+            win_size=jnp.asarray(win_size),
+            edge_leaf=jnp.asarray(edge_leaf), edge_win=jnp.asarray(edge_win),
+            leaf_start=jnp.asarray(leaf_start), leaf_size=jnp.asarray(leaf_size),
+            leaf_lo_g=jnp.asarray(flat.leaf_lo), leaf_hi_g=jnp.asarray(flat.leaf_hi),
+            inv_order=jnp.asarray(inv.astype(np.int32)),
+            node_csl=jnp.asarray(rt.node_csl), node_shift=jnp.asarray(rt.node_shift),
+            node_lam=jnp.asarray(rt.node_lam),
+            rt_parent=jnp.asarray(rt.edge_parent),
+            rt_sid=jnp.asarray(rt.edge_sid.astype(np.int32)),
+            rt_leaf=jnp.asarray(rt.edge_leaf), rt_child=jnp.asarray(rt.edge_child),
+            rt_lo=jnp.asarray(rt.edge_lo), rt_hi=jnp.asarray(rt.edge_hi),
+            n=n, w=w, chunk=chunk_eff, depth=rt.depth,
+            lmax=max(int(np.diff(offs).max()) if L else 1, 1),
+            total=total,
+            has_duplicates=index.stats.n_duplicates > 0,
+            max_replica=int(index.params.max_replica),
+            row_bounds=row_bounds,
+        )
+        return dev
+
+    # -- sharding ------------------------------------------------------------
+    def shardings(self, mesh, axes="data") -> "DeviceIndex":
+        """A DeviceIndex-shaped pytree of NamedShardings: the ``[S, ...]``
+        fields split over ``axes`` on dim 0, everything else replicated.
+        Usable both for ``device_put`` and as jit ``in_shardings``."""
+        axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+        repl = NamedSharding(mesh, P())
+        kw = {}
+        for f in _ARRAY_FIELDS:
+            leaf = getattr(self, f)
+            if f in _SHARDED_FIELDS:
+                kw[f] = NamedSharding(
+                    mesh, P(axes_t, *([None] * (len(leaf.shape) - 1))))
+            else:
+                kw[f] = repl
+        return dataclasses.replace(self, **kw)
+
+    def shard(self, mesh, axes: str | tuple = None) -> "DeviceIndex":
+        """Place the index on ``mesh``: shards over the data axes (leaf
+        aligned by construction), small tables replicated."""
+        if axes is None:
+            axes = (("pod", "data") if "pod" in mesh.axis_names else "data")
+        return jax.device_put(self, self.shardings(mesh, axes))
+
+    # -- incremental state ---------------------------------------------------
+    def with_alive(self, alive_by_id: np.ndarray) -> "DeviceIndex":
+        """Re-derive the padded tombstone mask from the host per-id ``alive``
+        vector (deletions/undeletions without rebuilding the layout).  Every
+        fuzzy replica of a dead id dies with it."""
+        ids_np = np.asarray(self.ids)
+        new = np.zeros(ids_np.shape, bool)
+        m = ids_np >= 0
+        new[m] = np.asarray(alive_by_id, bool)[ids_np[m]]
+        arr = jnp.asarray(new)
+        sharding = getattr(self.alive, "sharding", None)
+        if sharding is not None:
+            arr = jax.device_put(arr, sharding)
+        return dataclasses.replace(self, alive=arr)
+
+
+def _flatten(dev: DeviceIndex):
+    return (tuple(getattr(dev, f) for f in _ARRAY_FIELDS),
+            tuple(getattr(dev, f) for f in _META_FIELDS))
+
+
+def _unflatten(aux, children) -> DeviceIndex:
+    return DeviceIndex(**dict(zip(_ARRAY_FIELDS, children)),
+                       **dict(zip(_META_FIELDS, aux)))
+
+
+jax.tree_util.register_pytree_node(DeviceIndex, _flatten, _unflatten)
+
+
+def abstract_device_index(n_series: int, length: int, w: int, *,
+                          n_shards: int = 1, chunk: int = 4096,
+                          n_leaves: int = 4096, lam_max: int = 4,
+                          depth: int = 8) -> DeviceIndex:
+    """A ShapeDtypeStruct-leaved DeviceIndex for lower/compile dry-runs:
+    equal-sized leaves, evenly divided shards (no data, shapes only)."""
+    S = max(int(n_shards), 1)
+    Tp = math.ceil(n_series / S)
+    Ls = math.ceil(n_leaves / S)
+    Lp = Ls + 1
+    chunk_eff = max(min(int(chunk), Tp), 1)
+    W = math.ceil(Tp / chunk_eff)
+    E = Ls + W
+    M = max(n_leaves // 4, 1)
+    Eg = max(n_leaves, 1)
+    f32, i32, b8 = jnp.float32, jnp.int32, jnp.bool_
+    sds = jax.ShapeDtypeStruct
+    return DeviceIndex(
+        db=sds((S, Tp, length), f32), alive=sds((S, Tp), b8),
+        ids=sds((S, Tp), i32),
+        leaf_lo=sds((S, Lp, w), f32), leaf_hi=sds((S, Lp, w), f32),
+        win_start=sds((S, W), i32), win_lead=sds((S, W), i32),
+        win_size=sds((S, W), i32),
+        edge_leaf=sds((S, E), i32), edge_win=sds((S, E), i32),
+        leaf_start=sds((n_leaves,), i32), leaf_size=sds((n_leaves,), i32),
+        leaf_lo_g=sds((n_leaves, w), f32), leaf_hi_g=sds((n_leaves, w), f32),
+        inv_order=sds((n_series,), i32),
+        node_csl=sds((M, lam_max), i32), node_shift=sds((M, lam_max), i32),
+        node_lam=sds((M,), i32),
+        rt_parent=sds((Eg,), i32), rt_sid=sds((Eg,), i32),
+        rt_leaf=sds((Eg,), i32), rt_child=sds((Eg,), i32),
+        rt_lo=sds((Eg, w), f32), rt_hi=sds((Eg, w), f32),
+        n=length, w=w, chunk=chunk_eff, depth=depth,
+        lmax=max(math.ceil(n_series / max(n_leaves, 1)), 1), total=n_series,
+        has_duplicates=False, max_replica=3,
+        row_bounds=tuple(min(s * Tp, n_series) for s in range(S + 1)),
+    )

@@ -14,10 +14,11 @@ The paper's Algorithm 1 maps onto the mesh as follows (DESIGN.md §2):
 * **Subtree builds** — after the root split, sid-partitioned subsets are
   independent; hosts build their partitions in parallel (single-controller
   here: host loop over partitions).
-* **Search** — the flat leaf table replicates (it is MBs); raw series stay
-  sharded.  Each device scans its shard with ``lb_isax``/``pairwise_l2`` and
-  a final k-way merge of (k ids, k distances) happens at the host — the
-  classic scatter-gather kNN plan.
+* **Search** — the ``DeviceIndex`` shards the ordered collection leaf-aligned
+  over ``data`` (leaf/routing tables replicate; they are MBs).  Each device
+  runs the windowed-pruning span loop on its shard and emits (kk ids, kk
+  distances); an all-gather + fused top-k merge (with segment-min dedup over
+  original ids) combines them on device — see ``core/search_device.py``.
 
 ``build_step`` / ``search_step`` are also exposed for the dry-run so the
 paper's technique itself appears in the §Roofline table.
@@ -57,18 +58,21 @@ def build_step(db_shard: jax.Array, w: int, b: int
 
 @functools.partial(jax.jit, static_argnums=(4,))
 def search_step(q: jax.Array, db_ordered: jax.Array, leaf_lo: jax.Array,
-                leaf_hi: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+                leaf_hi: jax.Array, k: int) -> tuple[jax.Array, jax.Array, jax.Array]:
     """One-shot device kNN: LB-scan over the leaf table + exact distances.
 
     The dry-run lowers this with ``db_ordered`` sharded over ``data`` —
-    GSPMD emits the cross-shard top-k combine."""
+    GSPMD emits the cross-shard top-k combine.  The third output is the
+    ``[Q]``-shaped per-query min squared lower bound over the leaf table
+    (the pruning statistic; its sqrt lower-bounds each query's true nearest
+    distance)."""
     from .lb import ed2_batch_jnp, mindist_jnp
     n = db_ordered.shape[1]
     paa_q = q.reshape(q.shape[0], leaf_lo.shape[1], -1).mean(-1)
-    lbs = mindist_jnp(paa_q, leaf_lo, leaf_hi, n)        # [Q, L] (pruning stats)
+    lbs = mindist_jnp(paa_q, leaf_lo, leaf_hi, n)        # [Q, L] squared
     d2 = ed2_batch_jnp(q, db_ordered)                    # [Q, N]
     neg, idx = jax.lax.top_k(-d2, k)
-    return idx, jnp.sqrt(jnp.maximum(-neg, 0.0)), lbs.min(axis=1)[:k]
+    return idx, jnp.sqrt(jnp.maximum(-neg, 0.0)), lbs.min(axis=1)
 
 
 # ---------------------------------------------------------------------------
@@ -100,28 +104,55 @@ def build_distributed(db: np.ndarray, params: DumpyParams | None = None
 
 def search_distributed(index: DumpyIndex, queries: np.ndarray, k: int
                        ) -> tuple[np.ndarray, np.ndarray]:
-    """Sharded exact kNN via the one-shot device plan."""
+    """Sharded exact kNN: a thin wrapper over the DeviceIndex search path.
+
+    Under a mesh with a ``data`` axis the index shards leaf-aligned over it
+    and each shard runs the windowed-pruning loop locally (per-shard top-k +
+    all-gather merge); without a mesh this is the single-device program.
+    Unlike the retired one-shot plan this inherits pruning, tombstones and
+    the in-merge fuzzy dedup."""
+    from .search_device import exact_search_device_batch
     mesh = get_mesh()
-    q = jnp.asarray(queries, jnp.float32)
-    dbo = jnp.asarray(index.db_ordered)
-    if mesh is not None and "data" in mesh.axis_names:
-        dbo = jax.device_put(dbo, NamedSharding(mesh, P("data", None)))
-    idx, d, _ = search_step(q, dbo, jnp.asarray(index.flat.leaf_lo),
-                            jnp.asarray(index.flat.leaf_hi), k)
-    # map ordered positions → original ids
-    return index.flat.order[np.asarray(idx)], np.asarray(d)
+    if mesh is not None and "data" not in mesh.axis_names:
+        mesh = None
+    ids, d, _ = exact_search_device_batch(index, queries, k, mesh=mesh)
+    return ids, d
+
+
+def lower_search_sharded(mesh, *, n_series: int = 1 << 22, length: int = 256,
+                         w: int = 16, chunk: int = 8192,
+                         n_leaves: int = 16384, k: int = 58,
+                         q_batch: int = 64):
+    """Lower the DeviceIndex sharded windowed search on ``mesh`` with
+    production shardings (shared by both dry-run entry points).  Returns the
+    jax ``Lowered`` object; callers ``.compile()`` and harvest analyses."""
+    from .device_index import abstract_device_index
+    from .search_device import _exact_knn_sharded, _mesh_shards
+
+    dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    dev_abs = abstract_device_index(n_series, length, w,
+                                    n_shards=_mesh_shards(mesh),
+                                    chunk=chunk, n_leaves=n_leaves)
+    # close over k: pjit rejects kwargs when in_shardings is given
+    search_k = lambda d, paa, q: _exact_knn_sharded(d, paa, q, k=k)
+    jitted = jax.jit(search_k,
+                     in_shardings=(dev_abs.shardings(mesh, dp), None, None))
+    paa_abs = jax.ShapeDtypeStruct((q_batch, w), jnp.float32)
+    q_abs = jax.ShapeDtypeStruct((q_batch, length), jnp.float32)
+    return jitted.lower(dev_abs, paa_abs, q_abs)
 
 
 def dryrun_cells(mesh) -> dict:
     """Extra §Roofline cells for the paper's own technique: lower+compile the
-    distributed build and search steps on the production mesh."""
+    distributed build step, the one-shot search and the DeviceIndex sharded
+    windowed search on the production mesh."""
     out = {}
     w, b = 16, 8
     n_series, length = 1 << 20, 256            # 1M × 256 per-cell stand-in
     db_abs = jax.ShapeDtypeStruct((n_series, length), jnp.float32)
+    dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
     with logical_rules(mesh, DEFAULT_RULES):
-        sh = NamedSharding(mesh, P(("pod", "data") if "pod" in mesh.axis_names
-                                   else "data", None))
+        sh = NamedSharding(mesh, P(dp, None))
         jb = jax.jit(build_step, static_argnums=(1, 2), in_shardings=(sh,))
         lo = jb.lower(db_abs, w, b)
         out["dumpy_build"] = lo.compile()
@@ -133,4 +164,8 @@ def dryrun_cells(mesh) -> dict:
                      in_shardings=(None, sh, None, None))
         lo2 = js.lower(q_abs, db_abs, lo_abs, lo_abs, 50)
         out["dumpy_search"] = lo2.compile()
+
+        lo3 = lower_search_sharded(mesh, n_series=n_series, length=length,
+                                   w=w, chunk=4096, n_leaves=L)
+        out["dumpy_search_sharded"] = lo3.compile()
     return out

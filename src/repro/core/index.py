@@ -162,7 +162,9 @@ class DumpyIndex:
         self.db_ordered = db[flat.order]
         self._pending: list[np.ndarray] = []   # §5.6 insertion buffer
         self._routing_flat: FlatRouting | None = None
-        self._win_cache: dict = {}             # chunk → window schedule
+        # (chunk, n_shards) → (DeviceIndex, alive snapshot); invalidated by
+        # updates (insert rebuilds the layout; delete refreshes the mask)
+        self._device_cache: dict = {}
 
     # -- construction --------------------------------------------------------
     @classmethod
@@ -245,7 +247,7 @@ class DumpyIndex:
         self.flat = flatten_tree(self.root, self.params.sax.b)
         self.db_ordered = self.db[self.flat.order]
         self._routing_flat = None
-        self._win_cache.clear()
+        self._device_cache.clear()    # layout changed: device state is stale
 
     @property
     def routing_flat(self) -> FlatRouting:
@@ -254,6 +256,29 @@ class DumpyIndex:
         if self._routing_flat is None:
             self._routing_flat = flatten_routing(self.root, self.params.sax.b)
         return self._routing_flat
+
+    def device_index(self, chunk: int = 2048, n_shards: int = 1, mesh=None):
+        """The cached :class:`~repro.core.device_index.DeviceIndex` for this
+        layout (built lazily per (chunk, n_shards, mesh); ``insert``
+        invalidates wholesale, tombstone drift is detected against the
+        ``alive`` snapshot and refreshed in place without rebuilding the
+        layout).  With ``mesh`` the ``[S, ...]`` fields are placed over its
+        data axes; the mesh is part of the cache key so the same shard count
+        on a different (or no) mesh never reuses a stale placement."""
+        from .device_index import DeviceIndex
+        key = (int(chunk), int(n_shards), mesh)
+        cached = self._device_cache.get(key)
+        if cached is None:
+            dev = DeviceIndex.from_index(self, chunk=chunk, n_shards=n_shards)
+            if mesh is not None:
+                dev = dev.shard(mesh)
+            self._device_cache[key] = (dev, self.alive.copy())
+            return dev
+        dev, alive_snap = cached
+        if not np.array_equal(alive_snap, self.alive):
+            dev = dev.with_alive(self.alive)
+            self._device_cache[key] = (dev, self.alive.copy())
+        return dev
 
     # -- serialization ---------------------------------------------------------
     def save(self, path: str) -> None:

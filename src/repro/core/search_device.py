@@ -1,43 +1,43 @@
-"""Fully-jitted exact kNN with lower-bound pruning — the device-resident
-analogue of ``search.exact_search`` (DESIGN.md §2).
+"""Device-resident kNN over a :class:`~repro.core.device_index.DeviceIndex`
+— the batched/sharded analogue of ``search.exact_search`` (DESIGN.md §2).
 
 The host variant walks leaves in LB order and stops early (the disk-search
-analogue).  This variant expresses the same plan as one XLA program:
+analogue).  Here the same plan is one XLA program per shard:
 
-    lb        = MINDIST(PAA(q), every leaf)           (lb_isax math)
-    order     = argsort(lb)
-    while lb[order[i]] < kth_best:                    (lax.while_loop)
-        slab  = dynamic_slice(ordered collection)     (contiguous leaf pack)
-        d     = |q - slab|²                           (MXU form)
-        topk  = merge(topk, d)
+    lb        = MINDIST(PAA(q), every local leaf)      (lb_isax math)
+    span LB   = segment-min over intersecting leaves
+    order     = argsort(min-over-queries span LB)
+    while any query still has an unpruned span:        (lax.while_loop)
+        slab  = dynamic_slice(shard-local collection)  (fixed-size span)
+        d     = |q - slab|²                            (MXU form, whole batch)
+        topk  = merge(topk, d)                         (per-query active mask)
 
-Leaf packs are variable-length; each iteration loads a fixed ``chunk`` window
-starting at the leaf offset and masks the tail (leaves longer than ``chunk``
-are covered by subsequent windows of the same leaf — handled by iterating
-windows, not leaves).  Early termination carries over windows because window
-LB = its leaf's LB.
+The per-shard loops are vmapped over the leading shard axis of the
+``DeviceIndex``; when that axis carries ``NamedSharding(mesh, P("data"))``
+GSPMD turns the vmap into shard-local execution and the final merge
 
-Batched multi-query search (the serving path, DumpyOS/MESSI-style) extends
-the same plan to ``Q`` queries in one program:
+    [S, Q, kk] --all-gather--> [Q, S·kk] --dedup+top_k--> [Q, kk]
 
-* queries are batch-encoded (``sax_encode_jnp`` / the Pallas encoder) and the
-  full ``[Q, n_leaves]`` squared-MINDIST table is computed up front
-  (``kernels.ops.lb_isax``);
-* one *shared* window schedule is ordered by the min-over-queries LB; a
-  ``lax.while_loop`` walks it once while every query keeps a private active
-  mask — per-query early termination uses the *suffix minimum* of its LBs
-  along the shared order (exact: a query may stop merging iff every remaining
-  window is prunable for it);
-* the ``[Q, chunk]`` distance tile per iteration is the MXU-form
-  ``|q|²+|x|²-2qx`` (``ed2_batch_jnp`` — same math as ``kernels/pairwise_l2``)
-  and the running top-k merge is fused (``kernels.ops.topk_merge``).
+into one collective.  Exactness carries over: each shard's early
+termination uses its local kth-best bound (≥ the global bound), so every
+shard's local top-kk is a superset of its contribution to the global top-kk.
+
+Fuzzy-duplicate dedup happens inside the device merge (a segment-min over
+original ids: lexsort each row by (id, d²), keep the first slot of every id
+run, re-select top-k) — serving never leaves the device, and the results are
+bitwise-identical whatever the shard count because the dedup output depends
+only on the (id, d²) value set, not the concatenation order.
+
+The exact path finishes with a tiny k-sized host re-rank: the loop ranks by
+the MXU-friendly ``|q|²+|x|²-2qx`` form whose rounding can swap near-ties
+relative to the host's direct-difference sum; recomputing the k candidates
+with host math (and sorting by (d, id), the host heap's order) restores
+bitwise id/distance parity with ``search.exact_search``.
 
 Approximate search is batched by flattening the host routing tree into
-arrays (``DumpyIndex.routing_flat``) so the root→leaf dict-walk becomes a
-vectorized ``fori_loop`` descent over the whole query batch.
-
-Used by tests as a cross-check of the host search and by the serving path
-when the whole collection is device-resident.
+arrays (held by the ``DeviceIndex``) so the root→leaf dict-walk becomes a
+vectorized ``fori_loop`` descent over the whole query batch; its leaf scan
+addresses the flattened ``[S·Tp, n]`` view of the shard layout.
 """
 from __future__ import annotations
 
@@ -47,310 +47,194 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .device_index import DeviceIndex
 from .index import DumpyIndex
-from .lb import ed2_batch_jnp, mindist_paa_bounds_np
-from .sax import sax_encode_jnp, sax_encode_np
+from .lb import ed2_batch_jnp
+from .sax import sax_encode_jnp
 from repro.kernels import ops
 
 
 # ---------------------------------------------------------------------------
-# shared window schedule (host, cached on the index)
+# shared device helpers
 # ---------------------------------------------------------------------------
 
-def _window_schedule(index: DumpyIndex, chunk: int):
-    """Split each leaf pack into fixed-size windows (host, tiny; cached on the
-    index and invalidated by updates).  Returns device arrays
-    ``(win_start, win_lead, win_size, win_leaf)`` in leaf order — callers
-    reorder by their own LB schedule."""
-    cached = index._win_cache.get(chunk)
-    if cached is not None:
-        return cached
-    offs = index.flat.leaf_offsets
-    total = int(offs[-1])
-    chunk_eff = max(min(chunk, total), 1)   # collections smaller than a chunk
-    starts, leads, sizes, leaves = [], [], [], []
-    for lid in range(index.flat.n_leaves):
-        s, e = int(offs[lid]), int(offs[lid + 1])
-        for w0 in range(s, e, chunk_eff):
-            # clamp the slice start so dynamic_slice never goes OOB; the
-            # shifted prefix is masked out via `lead` (no double scanning)
-            st = min(w0, max(total - chunk_eff, 0))
-            starts.append(st)
-            leads.append(w0 - st)
-            sizes.append(min(e - w0, chunk_eff))
-            leaves.append(lid)
-    sched = (jnp.asarray(np.asarray(starts, np.int32)),
-             jnp.asarray(np.asarray(leads, np.int32)),
-             jnp.asarray(np.asarray(sizes, np.int32)),
-             np.asarray(leaves, np.int64), chunk_eff)
-    index._win_cache[chunk] = sched
-    return sched
+def _encode_batch(qs: jax.Array, w: int, b: int) -> tuple[jax.Array, jax.Array]:
+    if jax.default_backend() == "tpu":
+        return ops.sax_encode(qs, w, b)
+    return sax_encode_jnp(qs, w, b)
 
 
-def _span_schedule(index: DumpyIndex, chunk: int):
-    """Leaf-agnostic window schedule for the *batched* path: fixed
-    ``chunk``-size spans tiling the ordered collection, plus the
-    (leaf, span)-intersection edge list.  A span's LB for a query is the min
-    MINDIST over the leaves it overlaps (computed on device by segment-min),
-    so pruning stays exact while every loop iteration feeds the MXU a full
-    ``[Q, chunk]`` tile — leaves are far smaller than a chunk, and per-leaf
-    windows would waste most of each tile on masking."""
-    key = ("span", chunk)
-    cached = index._win_cache.get(key)
-    if cached is not None:
-        return cached
-    offs = index.flat.leaf_offsets
-    total = int(offs[-1])
-    chunk_eff = max(min(chunk, total), 1)
-    starts, leads, sizes = [], [], []
-    edge_leaf, edge_win = [], []
-    for wi, w0 in enumerate(range(0, total, chunk_eff)):
-        st = min(w0, max(total - chunk_eff, 0))
-        size = min(total - w0, chunk_eff)
-        starts.append(st)
-        leads.append(w0 - st)
-        sizes.append(size)
-        la = int(np.searchsorted(offs, w0, side="right")) - 1
-        lb = int(np.searchsorted(offs, w0 + size, side="left"))
-        for lid in range(la, lb):
-            edge_leaf.append(lid)
-            edge_win.append(wi)
-    sched = (jnp.asarray(np.asarray(starts, np.int32)),
-             jnp.asarray(np.asarray(leads, np.int32)),
-             jnp.asarray(np.asarray(sizes, np.int32)),
-             jnp.asarray(np.asarray(edge_leaf, np.int32)),
-             jnp.asarray(np.asarray(edge_win, np.int32)), chunk_eff)
-    index._win_cache[key] = sched
-    return sched
+def _result_margin(dev: DeviceIndex, k: int) -> int:
+    """Top-k width the device loop must carry: fuzzy duplication can fill up
+    to ``1 + max_replica`` slots per distinct id (the plain layout needs no
+    margin — a wider k weakens early termination for nothing)."""
+    if dev.has_duplicates:
+        return k * (1 + dev.max_replica)
+    return k
 
 
-def _result_margin(index: DumpyIndex, k: int) -> int:
-    """Internal top-k margin only when the layout can yield duplicate ids
-    (fuzzy duplication); a margin weakens early termination, so the plain
-    layout searches exactly k.  Tombstones need no margin — deleted rows are
-    masked to +inf on device before the top-k merge."""
-    kk = k
-    if index.stats.n_duplicates > 0:
-        kk = k * (1 + index.params.max_replica)
-    return kk
+def _dedup_topk(d2: jax.Array, ids: jax.Array, k: int
+                ) -> tuple[jax.Array, jax.Array]:
+    """Device dedup + final top-k: segment-min over original ids.
+
+    Each row is lexsorted by (id, d²); the first slot of an id run is that
+    id's min distance, later slots (fuzzy replicas) and ``-1`` sentinels are
+    masked to ``+inf``; ``top_k`` then re-sorts by distance.  Ties between
+    distinct ids resolve to the smaller id (the array is id-sorted), which
+    matches the host heap's (d, id) order.  The output depends only on the
+    (id, d²) value set — concatenation order (and hence shard count) cannot
+    change it."""
+    Q, C = ids.shape
+    perm = jnp.lexsort((d2, ids), axis=-1)
+    ids_s = jnp.take_along_axis(ids, perm, 1)
+    d_s = jnp.take_along_axis(d2, perm, 1)
+    first = jnp.concatenate(
+        [jnp.ones((Q, 1), bool), ids_s[:, 1:] != ids_s[:, :-1]], axis=1)
+    keep = first & (ids_s >= 0)
+    d_m = jnp.where(keep, d_s, jnp.inf)
+    i_m = jnp.where(keep, ids_s, -1)
+    neg, sel = jax.lax.top_k(-d_m, min(k, C))
+    return -neg, jnp.take_along_axis(i_m, sel, 1)
 
 
-def _host_rerank(index: DumpyIndex, qs: np.ndarray, pos: np.ndarray,
-                 d_dev: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-    """Recompute the k-sized candidate distances with the host ``ed_np``
-    float32 math and re-sort.  The device loop ranks by the MXU-friendly
-    ``|q|²+|x|²-2qx`` form whose rounding can swap near-ties relative to the
-    host's direct-difference sum; re-ranking the tiny result set restores
-    bitwise id/distance parity with ``search.exact_search``.  ``inf`` device
-    distances mark invalid slots and stay ``inf``."""
-    cand = index.db_ordered[pos]                       # [Q, kk, n]
+# ---------------------------------------------------------------------------
+# sharded exact search (one XLA program; S=1 is the single-device case)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _exact_knn_sharded(dev: DeviceIndex, paa_q: jax.Array, qs: jax.Array, *,
+                       k: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """MINDIST tables → per-shard span loops (vmapped) → all-gather merge
+    with in-merge dedup.  Returns ``(d [Q,k], original ids [Q,k],
+    spans_visited [Q])`` with invalid slots as ``inf / -1``.
+
+    Early termination is per query *and* per shard: along the shard's span
+    order, query q may stop merging at step i iff its suffix-min LB there is
+    ≥ its running kth best — every span it has not seen locally is
+    individually prunable."""
+    Q = qs.shape[0]
+    chunk = dev.chunk
+    n = dev.n
+
+    def per_shard(db_s, alive_s, ids_s, lo_s, hi_s,
+                  w_start, w_lead, w_size, e_leaf, e_win):
+        W = w_start.shape[0]
+        lbq = ops.lb_isax(paa_q, lo_s, hi_s, n)             # [Q, Lp] squared
+        # span LB = min over intersecting leaves (exact: it lower-bounds
+        # every series the span contains; pad edges hit the +inf pad leaf)
+        win_lb = jax.ops.segment_min(lbq[:, e_leaf].T, e_win, num_segments=W,
+                                     indices_are_sorted=True).T  # [Q, W]
+        order = jnp.argsort(win_lb.min(axis=0))   # most promising for anyone
+        w_start, w_lead, w_size = w_start[order], w_lead[order], w_size[order]
+        win_lb = win_lb[:, order]
+        suffix = jnp.flip(jax.lax.cummin(jnp.flip(win_lb, 1), axis=1), 1)
+        suffix = jnp.concatenate(
+            [suffix, jnp.full((Q, 1), jnp.inf, jnp.float32)], axis=1)
+
+        def cond(carry):
+            i, topd, topi, vis = carry
+            return (i < W) & jnp.any(suffix[:, i] < topd[:, k - 1])
+
+        def body(carry):
+            i, topd, topi, vis = carry
+            start = w_start[i]
+            slab = jax.lax.dynamic_slice(db_s, (start, 0), (chunk, n))
+            d2 = ed2_batch_jnp(qs, slab)                    # [Q, chunk] MXU
+            j = jnp.arange(chunk)
+            valid = (j >= w_lead[i]) & (j < w_lead[i] + w_size[i])
+            valid &= jax.lax.dynamic_slice(alive_s, (start,), (chunk,))
+            qact = win_lb[:, i] < topd[:, k - 1]            # [Q] active mask
+            d2 = jnp.where(valid[None, :] & qact[:, None], d2, jnp.inf)
+            sid = jax.lax.dynamic_slice(ids_s, (start,), (chunk,))
+            idt = jnp.where(jnp.isinf(d2), -1,
+                            jnp.broadcast_to(sid[None, :], (Q, chunk)))
+            topd, topi = ops.topk_merge(topd, topi, d2, idt)
+            return i + 1, topd, topi, vis + qact.astype(jnp.int32)
+
+        init = (jnp.int32(0),
+                jnp.full((Q, k), jnp.inf, jnp.float32),
+                jnp.full((Q, k), -1, jnp.int32),
+                jnp.zeros((Q,), jnp.int32))
+        _, topd, topi, vis = jax.lax.while_loop(cond, body, init)
+        return topd, topi, vis
+
+    topd, topi, vis = jax.vmap(per_shard)(
+        dev.db, dev.alive, dev.ids, dev.leaf_lo, dev.leaf_hi,
+        dev.win_start, dev.win_lead, dev.win_size,
+        dev.edge_leaf, dev.edge_win)                        # [S, Q, k]
+    S = topd.shape[0]
+    alld = jnp.moveaxis(topd, 0, 1).reshape(Q, S * k)       # all-gather when
+    alli = jnp.moveaxis(topi, 0, 1).reshape(Q, S * k)       # sharded over S
+    d2m, idm = _dedup_topk(alld, alli, k)
+    return jnp.sqrt(d2m), idm, vis.sum(axis=0)
+
+
+def _finalize_exact(index: DumpyIndex, qs: np.ndarray, ids_dev: np.ndarray,
+                    k: int) -> tuple[np.ndarray, np.ndarray]:
+    """k-sized host re-rank for bitwise parity with ``search.exact_search``:
+    recompute candidate distances with the host direct-difference math and
+    sort by (d, id) — exactly the host heap's order.  Device invalid slots
+    (``id -1``) stay padded as ``-1 / inf``."""
+    Q, kk = ids_dev.shape
+    cand = index.db[np.maximum(ids_dev, 0)]                 # [Q, kk, n]
     diff = cand - qs[:, None, :]
-    d = np.sqrt((diff * diff).sum(axis=-1))
-    d = np.where(np.isinf(d_dev), np.inf, d).astype(np.float32)
-    order = np.argsort(d, axis=1, kind="stable")
-    return (np.take_along_axis(pos, order, axis=1),
-            np.take_along_axis(d, order, axis=1))
-
-
-def _dedup_ids(ids: np.ndarray, d: np.ndarray, k: int,
-               alive: np.ndarray | None = None) -> tuple[np.ndarray, np.ndarray]:
-    """Host-side k-sized fixup shared by the exact and approximate paths:
-    drop -1 sentinels, fuzzy duplicates and (when ``alive`` is given)
-    tombstoned series; pad short results with -1/inf."""
-    keep, seen = [], set()
-    for j in range(len(ids)):
-        i = int(ids[j])
-        if i < 0 or i in seen or (alive is not None and not alive[i]):
-            continue
-        seen.add(i)
-        keep.append(j)
-    keep = np.asarray(keep[:k], int)
-    out_ids = np.full(k, -1, np.int64)
-    out_d = np.full(k, np.inf, np.float32)
-    out_ids[:len(keep)] = ids[keep]
-    out_d[:len(keep)] = d[keep]
+    d = np.sqrt((diff * diff).sum(axis=-1)).astype(np.float32)
+    d = np.where(ids_dev < 0, np.inf, d)
+    out_ids = np.full((Q, k), -1, np.int64)
+    out_d = np.full((Q, k), np.inf, np.float32)
+    for qi in range(Q):
+        perm = np.lexsort((ids_dev[qi], d[qi]))[:k]
+        perm = perm[np.isfinite(d[qi][perm])]
+        out_ids[qi, :len(perm)] = ids_dev[qi][perm]
+        out_d[qi, :len(perm)] = d[qi][perm]
     return out_ids, out_d
 
 
-def _dedup_fixup(index: DumpyIndex, pos: np.ndarray, d: np.ndarray,
-                 k: int) -> tuple[np.ndarray, np.ndarray]:
-    """Ordered positions → original ids, then the shared dedup/pad fixup."""
-    return _dedup_ids(index.flat.order[pos], d, k, alive=index.alive)
-
-
-# ---------------------------------------------------------------------------
-# single query
-# ---------------------------------------------------------------------------
-
-@functools.partial(jax.jit, static_argnames=("k", "chunk"))
-def _exact_knn_device(q: jax.Array, db_ordered: jax.Array, alive_ord: jax.Array,
-                      win_start: jax.Array, win_lead: jax.Array,
-                      win_size: jax.Array, win_lb: jax.Array,
-                      seed_d2: jax.Array, seed_ids: jax.Array, *, k: int,
-                      chunk: int) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """``win_*``: per fixed-size window (precomputed, sorted by LB asc);
-    ``lead`` masks the shifted prefix of end-clamped windows so every
-    collection position is scanned by exactly one window."""
-    n_win = win_start.shape[0]
-    N = db_ordered.shape[0]
-
-    def cond(carry):
-        i, topd, topi = carry
-        kth = topd[k - 1]
-        return (i < n_win) & (win_lb[i] < kth)
-
-    def body(carry):
-        i, topd, topi = carry
-        start = win_start[i]
-        slab = jax.lax.dynamic_slice(db_ordered, (start, 0),
-                                     (chunk, db_ordered.shape[1]))
-        d2 = ((slab - q[None, :]) ** 2).sum(-1)
-        j = jnp.arange(chunk)
-        valid = (j >= win_lead[i]) & (j < win_lead[i] + win_size[i])
-        valid &= jax.lax.dynamic_slice(alive_ord, (start,), (chunk,))
-        d2 = jnp.where(valid, d2, jnp.inf)
-        ids = jnp.clip(start + jnp.arange(chunk), 0, N - 1)
-        topd, topi = ops.topk_merge(topd[None], topi[None], d2[None],
-                                    ids[None])
-        return i + 1, topd[0], topi[0]
-
-    init = (jnp.int32(0), seed_d2, seed_ids)
-    i, topd, topi = jax.lax.while_loop(cond, body, init)
-    return jnp.sqrt(topd), topi, i
-
-
-def exact_search_device(index: DumpyIndex, q: np.ndarray, k: int,
-                        chunk: int = 512) -> tuple[np.ndarray, np.ndarray, int]:
-    """Returns (original ids, distances, windows visited)."""
-    n = index.n
-    paa_q, _ = sax_encode_np(q.reshape(1, -1), index.params.sax)
-    lb = mindist_paa_bounds_np(paa_q[0], index.flat.leaf_lo,
-                               index.flat.leaf_hi, n)
-    lb = lb * lb       # squared: the loop compares against squared top-k
-
-    win_start, win_lead, win_size, win_leaf, chunk = _window_schedule(index,
-                                                                      chunk)
-    lbs = lb[win_leaf]
-    order = np.argsort(lbs, kind="stable")
-    order_d = jnp.asarray(order.astype(np.int32))
-    win_lb = jnp.asarray(lbs[order], jnp.float32)
-
-    kk = _result_margin(index, k)
-    seed_d2 = jnp.full((kk,), jnp.inf, jnp.float32)
-    seed_ids = jnp.zeros((kk,), jnp.int32)
-    d, pos, visited = _exact_knn_device(
-        jnp.asarray(q, jnp.float32), jnp.asarray(index.db_ordered),
-        jnp.asarray(index.alive[index.flat.order]),
-        win_start[order_d], win_lead[order_d], win_size[order_d], win_lb,
-        seed_d2, seed_ids, k=kk, chunk=chunk)
-    q2 = np.ascontiguousarray(q, np.float32).reshape(1, -1)
-    pos, d = _host_rerank(index, q2, np.asarray(pos)[None], np.asarray(d)[None])
-    ids, d = _dedup_fixup(index, pos[0], d[0], k)
-    valid = ids >= 0
-    return ids[valid], d[valid], int(visited)
-
-
-# ---------------------------------------------------------------------------
-# batched multi-query exact search
-# ---------------------------------------------------------------------------
-
-@functools.partial(jax.jit, static_argnames=("k", "chunk", "n"))
-def _exact_knn_device_batch(paa_q: jax.Array, qs: jax.Array,
-                            db_ordered: jax.Array, alive_ord: jax.Array,
-                            leaf_lo: jax.Array, leaf_hi: jax.Array,
-                            win_start: jax.Array, win_lead: jax.Array,
-                            win_size: jax.Array, edge_leaf: jax.Array,
-                            edge_win: jax.Array, *,
-                            k: int, chunk: int, n: int):
-    """One XLA program: MINDIST table → shared schedule → masked while_loop.
-
-    Early termination is per query: along the shared window order, query q is
-    allowed to stop merging at step i iff ``suffix_min_lb[q, i] >= kth_q`` —
-    every window it has not seen is individually prunable.  The loop exits
-    when that holds for all queries (or windows run out)."""
-    Q = qs.shape[0]
-    N = db_ordered.shape[0]
-    n_win = win_start.shape[0]
-
-    lbq = ops.lb_isax(paa_q, leaf_lo, leaf_hi, n)      # [Q, L] squared
-    # span LB = min over intersecting leaves (exact: it lower-bounds every
-    # series the span contains)
-    win_lb = jax.ops.segment_min(lbq[:, edge_leaf].T, edge_win,
-                                 num_segments=n_win,
-                                 indices_are_sorted=True).T  # [Q, W]
-    # shared schedule: most-promising-for-anyone first
-    order = jnp.argsort(win_lb.min(axis=0))
-    win_start = win_start[order]
-    win_lead = win_lead[order]
-    win_size = win_size[order]
-    win_lb = win_lb[:, order]
-    # suffix min over the shared order (+inf sentinel past the end)
-    suffix = jnp.flip(jax.lax.cummin(jnp.flip(win_lb, 1), axis=1), 1)
-    suffix = jnp.concatenate(
-        [suffix, jnp.full((Q, 1), jnp.inf, jnp.float32)], axis=1)
-
-    def cond(carry):
-        i, topd, topi, visited = carry
-        kth = topd[:, k - 1]
-        return (i < n_win) & jnp.any(suffix[:, i] < kth)
-
-    def body(carry):
-        i, topd, topi, visited = carry
-        start = win_start[i]
-        slab = jax.lax.dynamic_slice(db_ordered, (start, 0),
-                                     (chunk, db_ordered.shape[1]))
-        d2 = ed2_batch_jnp(qs, slab)                         # [Q, chunk] MXU
-        j = jnp.arange(chunk)
-        valid = (j >= win_lead[i]) & (j < win_lead[i] + win_size[i])
-        valid &= jax.lax.dynamic_slice(alive_ord, (start,), (chunk,))
-        kth = topd[:, k - 1]
-        qact = win_lb[:, i] < kth                            # [Q] active mask
-        d2 = jnp.where(valid[None, :] & qact[:, None], d2, jnp.inf)
-        ids = jnp.broadcast_to(jnp.clip(start + j, 0, N - 1)[None, :],
-                               (Q, chunk))
-        topd, topi = ops.topk_merge(topd, topi, d2, ids)
-        return i + 1, topd, topi, visited + qact.astype(jnp.int32)
-
-    init = (jnp.int32(0),
-            jnp.full((Q, k), jnp.inf, jnp.float32),
-            jnp.zeros((Q, k), jnp.int32),
-            jnp.zeros((Q,), jnp.int32))
-    i, topd, topi, visited = jax.lax.while_loop(cond, body, init)
-    return jnp.sqrt(topd), topi, visited, i
+def _mesh_shards(mesh) -> int:
+    s = 1
+    for ax in ("pod", "data"):
+        if mesh is not None and ax in mesh.axis_names:
+            s *= mesh.shape[ax]
+    return s
 
 
 def exact_search_device_batch(index: DumpyIndex, qs: np.ndarray, k: int,
-                              chunk: int = 2048
+                              chunk: int = 2048, mesh=None,
+                              dev: DeviceIndex | None = None
                               ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Batched exact kNN: ``qs [Q, n]`` → ``(ids [Q, k], d [Q, k],
-    windows_visited [Q])``.  Results match ``search.exact_search`` per query
-    (fuzzy duplicates deduplicated, tombstones skipped); short results pad
-    with ``id -1 / d inf``."""
+    spans_visited [Q])``.  Results match ``search.exact_search`` per query
+    (fuzzy duplicates deduplicated on device, tombstones skipped); short
+    results pad with ``id -1 / d inf``.
+
+    With ``mesh`` (or a pre-sharded ``dev``), the span loop runs shard-local
+    over the data axis and the per-shard top-k merges through an all-gather —
+    bitwise-identical to the single-device result."""
     qs = np.ascontiguousarray(np.atleast_2d(qs), np.float32)
+    if dev is None:
+        dev = index.device_index(chunk=chunk, n_shards=_mesh_shards(mesh),
+                                 mesh=mesh)
     sax = index.params.sax
     qs_dev = jnp.asarray(qs)
-    paa_q, _ = (ops.sax_encode(qs_dev, sax.w, sax.b)
-                if jax.default_backend() == "tpu"
-                else sax_encode_jnp(qs_dev, sax.w, sax.b))
-
-    win_start, win_lead, win_size, edge_leaf, edge_win, chunk = \
-        _span_schedule(index, chunk)
+    paa_q, _ = _encode_batch(qs_dev, sax.w, sax.b)
     # +8 slack: the loop ranks by the MXU |q|²+|x|²-2qx form, whose f32
-    # cancellation can swap near-ties across the k boundary; the host re-rank
-    # (direct-difference math) then picks the true top-k from the widened set
-    kk = _result_margin(index, k) + 8
-    d, pos, visited, _ = _exact_knn_device_batch(
-        paa_q, qs_dev, jnp.asarray(index.db_ordered),
-        jnp.asarray(index.alive[index.flat.order]),
-        jnp.asarray(index.flat.leaf_lo), jnp.asarray(index.flat.leaf_hi),
-        win_start, win_lead, win_size, edge_leaf, edge_win,
-        k=kk, chunk=chunk, n=index.n)
-    pos, d = _host_rerank(index, qs, np.asarray(pos), np.asarray(d))
-    ids_out = np.full((len(qs), k), -1, np.int64)
-    d_out = np.full((len(qs), k), np.inf, np.float32)
-    for qi in range(len(qs)):
-        ids_out[qi], d_out[qi] = _dedup_fixup(index, pos[qi], d[qi], k)
+    # cancellation can swap near-ties across the k boundary; the host
+    # re-rank (direct-difference math) then picks the true top-k from the
+    # widened set
+    kk = _result_margin(dev, k) + 8
+    d, ids, visited = _exact_knn_sharded(dev, paa_q, qs_dev, k=kk)
+    ids_out, d_out = _finalize_exact(index, qs, np.asarray(ids), k)
     return ids_out, d_out, np.asarray(visited)
+
+
+def exact_search_device(index: DumpyIndex, q: np.ndarray, k: int,
+                        chunk: int = 2048) -> tuple[np.ndarray, np.ndarray, int]:
+    """Single-query exact kNN: a batch of one through the shared device
+    path.  Returns (original ids, distances, spans visited)."""
+    ids, d, visited = exact_search_device_batch(index, q.reshape(1, -1), k,
+                                                chunk=chunk)
+    valid = ids[0] >= 0
+    return ids[0][valid], d[0][valid], int(visited[0])
 
 
 # ---------------------------------------------------------------------------
@@ -404,48 +288,53 @@ def _descend_device(sax_q: jax.Array, node_csl: jax.Array,
     return leaf
 
 
-@functools.partial(jax.jit, static_argnames=("k", "lmax", "nbr"))
-def _leaf_topk_device(qs: jax.Array, db_ordered: jax.Array, order: jax.Array,
-                      alive_ord: jax.Array, leaf_offsets: jax.Array,
-                      lbq: jax.Array, routed: jax.Array, *, k: int, lmax: int,
-                      nbr: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+@functools.partial(jax.jit, static_argnames=("k", "kk", "nbr"))
+def _leaf_topk_device(dev: DeviceIndex, qs: jax.Array, lbq: jax.Array,
+                      routed: jax.Array, *, k: int, kk: int, nbr: int
+                      ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Scan the routed leaf (plus the ``nbr-1`` next-best leaves by MINDIST)
-    of every query and return its top-k: ``(ids [Q,k], d2 [Q,k],
-    leaves [Q,nbr])``.  Invalid slots come back as ``id -1 / d2 inf``.
+    of every query over the flattened ``[S·Tp, n]`` shard layout and return
+    the deduped top-k: ``(ids [Q,k], d2 [Q,k], leaves [Q,nbr])``.  Invalid
+    slots come back as ``id -1 / d2 inf``.
 
     Leaves are scanned one rank at a time with a fused running top-k merge,
     so the peak temporary is ``[Q, lmax, n]`` — a monolithic
     ``[Q, nbr, lmax, n]`` gather would be hundreds of MB per decode step at
     serving defaults."""
     Q = qs.shape[0]
-    N = db_ordered.shape[0]
+    lmax = dev.lmax
+    db_flat = dev.db.reshape(-1, dev.n)
+    ids_flat = dev.ids.reshape(-1)
+    alive_flat = dev.alive.reshape(-1)
+    T = db_flat.shape[0]
     # routed leaf first (forced via -inf), then globally next-best leaves
     scores = lbq.at[jnp.arange(Q), routed].set(-jnp.inf)
     _, leaves = jax.lax.top_k(-scores, nbr)                  # [Q, nbr]
-    kk = min(k, nbr * lmax)
 
     def body(j, carry):
         topd, topi = carry
-        starts = leaf_offsets[leaves[:, j]]                  # [Q]
-        sizes = leaf_offsets[leaves[:, j] + 1] - starts
+        starts = dev.leaf_start[leaves[:, j]]                # [Q] flattened
+        sizes = dev.leaf_size[leaves[:, j]]
         rows = starts[:, None] + jnp.arange(lmax)[None, :]
-        rows_c = jnp.clip(rows, 0, N - 1)                    # [Q, lmax]
-        cand = db_ordered[rows_c]                            # [Q, lmax, n]
+        rows_c = jnp.clip(rows, 0, T - 1)                    # [Q, lmax]
+        cand = db_flat[rows_c]                               # [Q, lmax, n]
         d2 = ((cand - qs[:, None, :]) ** 2).sum(-1)          # [Q, lmax]
         valid = (jnp.arange(lmax)[None, :] < sizes[:, None]) \
-            & alive_ord[rows_c]
+            & alive_flat[rows_c]
         d2 = jnp.where(valid, d2, jnp.inf)
-        ids = jnp.where(valid, order[rows_c], -1)
-        return ops.topk_merge(topd, topi, d2, ids)
+        idt = jnp.where(valid, ids_flat[rows_c], -1)
+        return ops.topk_merge(topd, topi, d2, idt)
 
     init = (jnp.full((Q, kk), jnp.inf, jnp.float32),
             jnp.full((Q, kk), -1, jnp.int32))
     topd, topi = jax.lax.fori_loop(0, nbr, body, init)
-    return topi, topd, leaves
+    d2f, idf = _dedup_topk(topd, topi, k)                    # segment-min dedup
+    return idf, d2f, leaves
 
 
 def approximate_search_device_batch(index: DumpyIndex, qs: np.ndarray, k: int,
-                                    nbr: int = 1
+                                    nbr: int = 1,
+                                    dev: DeviceIndex | None = None
                                     ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Batched approximate kNN (paper §5.5 descent, vectorized over queries).
 
@@ -455,51 +344,32 @@ def approximate_search_device_batch(index: DumpyIndex, qs: np.ndarray, k: int,
     ``extended_search`` the extras are chosen globally, not within the target
     subtree.  Returns ``(ids [Q, k'], d [Q, k'], leaves [Q, nbr])`` with
     ``k' = min(k, nbr·max_leaf_size)``; empty slots are ``id -1 / d inf``.
-    """
+    Fuzzy replicas sharing a leaf are deduped in the device merge — the
+    whole path stays on device."""
     qs = np.ascontiguousarray(np.atleast_2d(qs), np.float32)
+    if dev is None:
+        dev = index.device_index()
     sax_p = index.params.sax
     qs_dev = jnp.asarray(qs)
-    paa_q, sax_q = (ops.sax_encode(qs_dev, sax_p.w, sax_p.b)
-                    if jax.default_backend() == "tpu"
-                    else sax_encode_jnp(qs_dev, sax_p.w, sax_p.b))
+    paa_q, sax_q = _encode_batch(qs_dev, sax_p.w, sax_p.b)
     sax_q = sax_q.astype(jnp.int32)
 
-    lbq = ops.lb_isax(paa_q, jnp.asarray(index.flat.leaf_lo),
-                            jnp.asarray(index.flat.leaf_hi), index.n)
-    rt = index.routing_flat
-    if rt.n_nodes == 0:          # degenerate tree: the root is the only leaf
+    lbq = ops.lb_isax(paa_q, dev.leaf_lo_g, dev.leaf_hi_g, dev.n)
+    if dev.node_lam.shape[0] == 0:   # degenerate tree: the root is the only leaf
         routed = jnp.zeros(len(qs), jnp.int32)
     else:
-        edge_lb = ops.lb_isax(paa_q, jnp.asarray(rt.edge_lo),
-                                    jnp.asarray(rt.edge_hi), index.n)
+        edge_lb = ops.lb_isax(paa_q, dev.rt_lo, dev.rt_hi, dev.n)
         routed = _descend_device(
-            sax_q, jnp.asarray(rt.node_csl), jnp.asarray(rt.node_shift),
-            jnp.asarray(rt.node_lam), jnp.asarray(rt.edge_parent),
-            jnp.asarray(rt.edge_sid.astype(np.int32)),
-            jnp.asarray(rt.edge_leaf), jnp.asarray(rt.edge_child),
-            edge_lb, depth=rt.depth)
+            sax_q, dev.node_csl, dev.node_shift, dev.node_lam,
+            dev.rt_parent, dev.rt_sid, dev.rt_leaf, dev.rt_child,
+            edge_lb, depth=dev.depth)
 
-    nbr = min(nbr, index.flat.n_leaves)
-    lmax = int(np.diff(index.flat.leaf_offsets).max())
-    # fuzzy replicas can share a leaf (sibling packing merges them), so fetch
-    # with the duplicate margin and dedup per row on host, like the exact path
-    kk = _result_margin(index, k)
-    ids, d2, leaves = _leaf_topk_device(
-        qs_dev, jnp.asarray(index.db_ordered),
-        jnp.asarray(index.flat.order.astype(np.int32)),
-        jnp.asarray(index.alive[index.flat.order]),
-        jnp.asarray(index.flat.leaf_offsets.astype(np.int32)),
-        lbq, routed, k=kk, lmax=lmax, nbr=nbr)
-    ids = np.asarray(ids).astype(np.int64)
-    d = np.sqrt(np.asarray(d2))
-    k_out = min(k, ids.shape[1])
-    if index.stats.n_duplicates > 0:
-        out_ids = np.full((len(ids), k_out), -1, np.int64)
-        out_d = np.full((len(ids), k_out), np.inf, np.float32)
-        for qi in range(len(ids)):
-            # alive filtering already happened on device; only dedup here
-            out_ids[qi], out_d[qi] = _dedup_ids(ids[qi], d[qi], k_out)
-        ids, d = out_ids, out_d
-    else:
-        ids, d = ids[:, :k_out], d[:, :k_out]
-    return ids, d, np.asarray(leaves)
+    nbr = min(nbr, dev.n_leaves)
+    # fuzzy replicas can share a leaf (sibling packing merges them), so merge
+    # with the duplicate margin and segment-min-dedup on device
+    kk = min(_result_margin(dev, k), nbr * dev.lmax)
+    k_out = min(k, nbr * dev.lmax)
+    ids, d2, leaves = _leaf_topk_device(dev, qs_dev, lbq, routed,
+                                        k=k_out, kk=kk, nbr=nbr)
+    return (np.asarray(ids).astype(np.int64), np.sqrt(np.asarray(d2)),
+            np.asarray(leaves))

@@ -62,6 +62,10 @@ class KnnSoftmaxHead:
         params = DumpyParams(sax=SaxParams(w=w, b=8),
                              split=SplitParams(th=th))
         self.index = DumpyIndex.build(series, params)
+        # the serving path holds the device-resident pytree, not raw arrays:
+        # uploaded once here, reused by every decode step (and shardable via
+        # device_index.shard(mesh) on a multi-device serving mesh)
+        self.device_index = self.index.device_index()
         self.w = w
         self.r = r_candidates
         self.nbr = nbr_nodes
@@ -105,10 +109,17 @@ class KnnSoftmaxHead:
         """Top-R candidate ids for a whole decode batch in one device program
         (vectorized root→leaf descent + fused leaf scan).  The recall knob is
         ``nbr_nodes``, as in the host path; extra leaves are the globally
-        next-best by MINDIST rather than subtree siblings.  Returns
-        ``[B, R'] int64`` with -1 padding where a batch row found fewer."""
+        next-best by MINDIST rather than subtree siblings.  Candidate ids are
+        deduped in the device merge — the whole retrieval stays on device.
+        Returns ``[B, R'] int64`` with -1 padding where a batch row found
+        fewer."""
+        # re-resolve through the index cache: a hit is a dict lookup (plus a
+        # cheap tombstone-snapshot compare), so the device state uploads once
+        # but deletions/inserts between decode steps are never served stale
+        self.device_index = self.index.device_index()
         ids, _, _ = approximate_search_device_batch(
-            self.index, self._encode_queries(H), self.r, nbr=self.nbr)
+            self.index, self._encode_queries(H), self.r, nbr=self.nbr,
+            dev=self.device_index)
         return ids
 
     def step_batch(self, H: np.ndarray,

@@ -13,7 +13,9 @@ import pytest
 
 from repro.core.baselines.brute import brute_force_knn
 from repro.core.build import DumpyParams
-from repro.core.distributed import build_distributed, build_step, search_distributed
+from repro.core.distributed import (build_distributed, build_step,
+                                    search_distributed, search_step)
+from repro.core.index import DumpyIndex
 from repro.core.sax import SaxParams
 from repro.core.split import SplitParams
 from repro.data.series import random_walks
@@ -42,6 +44,74 @@ def test_distributed_build_and_search_equal_host_path():
     for i, q in enumerate(qs):
         gt_ids, gt_d = brute_force_knn(db, q, 5)
         np.testing.assert_allclose(np.sort(d[i]), np.sort(gt_d), atol=1e-3)
+
+
+def test_search_step_returns_per_query_min_lb():
+    """Regression: the per-query pruning statistic is [Q]-shaped (it used to
+    be truncated to k entries) and lower-bounds each query's true nearest
+    distance."""
+    db = random_walks(512, 64, seed=4)
+    idx = DumpyIndex.build(db, PARAMS)
+    q = random_walks(7, 64, seed=5)
+    ids, d, lbs = search_step(jnp.asarray(q), jnp.asarray(idx.db_ordered),
+                              jnp.asarray(idx.flat.leaf_lo),
+                              jnp.asarray(idx.flat.leaf_hi), 3)
+    assert lbs.shape == (7,)                        # [Q], not [k]
+    assert ids.shape == (7, 3) and d.shape == (7, 3)
+    # lbs is squared MINDIST; its sqrt bounds the true nearest distance
+    assert np.all(np.sqrt(np.asarray(lbs)) <= np.asarray(d[:, 0]) + 1e-4)
+
+
+def test_sharded_search_multidevice_bitwise_parity_subprocess():
+    """The DeviceIndex sharded exact search on a forced 4-device host mesh
+    must be bitwise-identical to host ``exact_search`` — including fuzzy
+    duplicates (deduped in the device merge) and tombstones."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys; sys.path.insert(0, "src")
+import json
+import numpy as np
+import jax
+from repro.core.build import DumpyParams
+from repro.core.index import DumpyIndex
+from repro.core.sax import SaxParams
+from repro.core.split import SplitParams
+from repro.core.search import exact_search
+from repro.core.search_device import exact_search_device_batch
+from repro.data.series import random_walks
+from repro.distributed.sharding import make_mesh
+
+assert len(jax.devices()) == 4
+db = random_walks(1200, 64, seed=2)
+idx = DumpyIndex.build(db, DumpyParams(sax=SaxParams(w=8, b=8),
+                                       split=SplitParams(th=64),
+                                       fuzzy_f=0.15))
+assert idx.stats.n_duplicates > 0
+idx.delete(3); idx.delete(17)
+qs = random_walks(6, 64, seed=11)
+mesh = make_mesh((4,), ("data",))
+ids1, d1, _ = exact_search_device_batch(idx, qs, 5)             # 1 shard
+ids4, d4, _ = exact_search_device_batch(idx, qs, 5, mesh=mesh)  # 4 shards
+dev = idx._device_cache[(2048, 4, mesh)][0]
+assert len(dev.db.sharding.device_set) == 4, dev.db.sharding
+assert (ids1 == ids4).all() and (d1 == d4).all()                # bitwise
+for i, q in enumerate(qs):
+    h_ids, h_d, _ = exact_search(idx, q, 5)
+    got = ids4[i][ids4[i] >= 0]
+    assert len(np.unique(got)) == len(got)          # dedup in the merge
+    assert 3 not in got and 17 not in got           # tombstones respected
+    np.testing.assert_array_equal(got, h_ids)
+    np.testing.assert_array_equal(d4[i][:len(h_d)], h_d)
+print(json.dumps({"ok": True, "n_dev": len(jax.devices())}))
+"""
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))), env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["ok"] and rec["n_dev"] == 4
 
 
 def test_sharding_rules_resolution_no_mesh_is_noop():
