@@ -2,10 +2,12 @@
 
 Measures queries/second of the batched exact path
 (``exact_search_device_batch``) against looping the single-query
-``exact_search_device``, plus the batched approximate path, at several batch
-sizes.  Steady-state numbers: each configuration is warmed once so XLA
-compilation is excluded (the serving regime — programs are compiled at index
-load, not per request).
+``exact_search_device``, plus the batched approximate path and the extended
+(Alg. 4) path over an ``nbr`` sweep — recall@k against brute force next to
+QPS, the serving recall/latency operating curve — at several batch sizes.
+Steady-state numbers: each configuration is warmed once so XLA compilation
+is excluded (the serving regime — programs are compiled at index load, not
+per request).
 
 Emits ``BENCH_batch_search.json`` next to the repo root (machine-readable)
 and, when a previous run's file exists, prints the QPS delta against it —
@@ -26,14 +28,19 @@ import os
 import sys
 import time
 
+import numpy as np
+
+from repro.core.baselines.brute import brute_force_knn
 from repro.core.index import DumpyIndex
 from repro.core.search_device import (approximate_search_device_batch,
                                       exact_search_device,
-                                      exact_search_device_batch)
+                                      exact_search_device_batch,
+                                      extended_search_device_batch)
 from repro.data.series import random_walks
 from . import common
 
 BATCHES = (8, 64)
+NBR_SWEEP = (1, 4, 16)          # extended-search recall/QPS trade-off series
 K = 10
 REGRESSION_TOL = 0.10           # warn when QPS drops by more than this
 OUT_JSON = os.path.join(os.path.dirname(os.path.dirname(
@@ -67,8 +74,10 @@ def _report_deltas(record: dict, prev: dict | None,
         old = prev["batches"].get(B)
         if not old:
             continue
-        for key in ("qps_exact_batch", "qps_approx_batch"):
-            if key not in old or not old[key]:
+        keys = ["qps_exact_batch", "qps_approx_batch"]
+        keys += [f"qps_extended_nbr{n}" for n in NBR_SWEEP]
+        for key in keys:
+            if key not in old or not old[key] or key not in cur:
                 continue
             delta = cur[key] / old[key] - 1.0
             note = f"{delta:+.1%} vs previous"
@@ -95,8 +104,10 @@ def run(n: int = common.N_SERIES, length: int = common.LENGTH,
     record: dict = {"n_series": n, "length": length, "k": K,
                     "n_leaves": int(idx.flat.n_leaves), "batches": {}}
 
+    sweep = NBR_SWEEP[:2] if quick else NBR_SWEEP
     for B in batches:
         qs = random_walks(B, length, seed=9000 + B)
+        gt = [set(brute_force_knn(db, q, K)[0].tolist()) for q in qs]
 
         t_loop = _time(lambda: [exact_search_device(idx, q, K) for q in qs],
                        repeat=1)
@@ -115,6 +126,22 @@ def run(n: int = common.N_SERIES, length: int = common.LENGTH,
         rows.append((f"batch_search/exact_batch/B{B}", qps_batch,
                      f"qps;speedup={speedup:.1f}x"))
         rows.append((f"batch_search/approx_batch/B{B}", qps_approx, "qps"))
+
+        # extended search (Alg. 4): recall vs QPS as the nbr budget widens —
+        # the serving operating-point curve (device path, no host re-rank)
+        for nbr in sweep:
+            t_ext = _time(lambda: extended_search_device_batch(
+                idx, qs, K, nbr=nbr, rerank=False))
+            ids, _, _ = extended_search_device_batch(idx, qs, K, nbr=nbr,
+                                                     rerank=False)
+            recall = float(np.mean(
+                [len(gt[i] & set(ids[i][ids[i] >= 0].tolist())) / K
+                 for i in range(B)]))
+            qps_ext = B / t_ext
+            record["batches"][str(B)][f"qps_extended_nbr{nbr}"] = qps_ext
+            record["batches"][str(B)][f"recall_extended_nbr{nbr}"] = recall
+            rows.append((f"batch_search/extended/B{B}/nbr{nbr}", qps_ext,
+                         f"qps;recall@{K}={recall:.3f}"))
 
     # quick mode is a smoke run on a smaller problem: deltas vs the committed
     # full-size baseline would be meaningless, and it must not overwrite it

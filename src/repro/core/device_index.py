@@ -17,7 +17,10 @@ search impossible to express.  ``DeviceIndex`` unifies it:
   shard can run the windowed-pruning loop locally;
 * the global leaf table (``leaf_start/size`` in flattened ``S·Tp`` row
   coordinates, global lo/hi envelopes) and the flattened routing tables
-  serve the batched approximate descent;
+  serve the batched approximate descent; the sibling routing tables
+  (per-edge/per-node contiguous subtree leaf spans, per-leaf parent group,
+  begin-sorted distinct-children member lists) drive the extended-search
+  (Alg. 4) root→subtree descent and its lower-bound-ordered leaf schedule;
 * ``inv_order`` maps an original id to the flattened row of its first
   replica (fuzzy duplication makes the map one-to-many; the remaining
   replicas are recoverable from ``ids``).
@@ -55,13 +58,17 @@ _ARRAY_FIELDS = (
     "leaf_start", "leaf_size", "leaf_lo_g", "leaf_hi_g", "inv_order",
     "node_csl", "node_shift", "node_lam",
     "rt_parent", "rt_sid", "rt_leaf", "rt_child", "rt_lo", "rt_hi",
+    "rt_nl", "rt_begin", "rt_end",
+    "node_begin", "node_end", "leaf_parent",
+    "grp_off", "grp_begin", "grp_end", "grp_lo", "grp_hi",
 )
 _SHARDED_FIELDS = frozenset({
     "db", "alive", "ids", "leaf_lo", "leaf_hi",
     "win_start", "win_lead", "win_size", "edge_leaf", "edge_win",
 })
 _META_FIELDS = ("n", "w", "chunk", "depth", "lmax", "total",
-                "has_duplicates", "max_replica", "row_bounds")
+                "has_duplicates", "max_replica", "row_bounds",
+                "gmax", "leaf_bounds")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,6 +99,18 @@ class DeviceIndex:
     rt_child: jax.Array    # [Eg] i32
     rt_lo: jax.Array       # [Eg, w] f32 child region bounds
     rt_hi: jax.Array       # [Eg, w] f32
+    # sibling routing tables (extended search, Alg. 4)
+    rt_nl: jax.Array       # [Eg] i32 #leaves under the edge target
+    rt_begin: jax.Array    # [Eg] i32 contiguous leaf span of the target
+    rt_end: jax.Array      # [Eg] i32
+    node_begin: jax.Array  # [M] i32 per-internal-node subtree leaf span
+    node_end: jax.Array    # [M] i32
+    leaf_parent: jax.Array  # [L] i32 parent internal node (-1: root leaf)
+    grp_off: jax.Array     # [M+1] i32 distinct-children group offsets
+    grp_begin: jax.Array   # [G+gmax] i32 member spans, begin-sorted per
+    grp_end: jax.Array     # [G+gmax] i32 group; gmax sentinel pad rows so a
+    grp_lo: jax.Array      # [G+gmax, w] f32 fixed-width dynamic slice of any
+    grp_hi: jax.Array      # [G+gmax, w] f32 group stays in bounds
     # -- static (aux data; part of the jit cache key) ------------------------
     n: int                 # series length
     w: int                 # SAX word length
@@ -102,6 +121,8 @@ class DeviceIndex:
     has_duplicates: bool   # fuzzy layout -> top-k needs the replica margin
     max_replica: int
     row_bounds: tuple      # S+1 ordered-row cuts (leaf-aligned, host ints)
+    gmax: int              # max distinct children of any internal node
+    leaf_bounds: tuple     # S+1 leaf-id cuts matching row_bounds
 
     # -- shapes --------------------------------------------------------------
     @property
@@ -212,6 +233,19 @@ class DeviceIndex:
         inv[order[::-1]] = pos_flat[::-1]       # first replica wins
 
         rt = index.routing_flat
+        gmax = rt.gmax
+        # gmax sentinel rows so the schedule's fixed-width dynamic slice of
+        # any group stays in bounds: begin/end = i32 max (never matches a
+        # leaf id and keeps the begin-sorted order), bounds = +inf (their
+        # MINDIST is +inf, and invalid members are masked anyway)
+        big = np.iinfo(np.int32).max
+        grp_begin = np.concatenate([rt.grp_begin,
+                                    np.full(gmax, big, np.int32)])
+        grp_end = np.concatenate([rt.grp_end, np.full(gmax, big, np.int32)])
+        grp_lo = np.concatenate([rt.grp_lo,
+                                 np.full((gmax, w), np.inf, np.float32)])
+        grp_hi = np.concatenate([rt.grp_hi,
+                                 np.full((gmax, w), np.inf, np.float32)])
         dev = cls(
             db=jnp.asarray(db_sh), alive=jnp.asarray(alive_sh),
             ids=jnp.asarray(ids_sh),
@@ -228,12 +262,22 @@ class DeviceIndex:
             rt_sid=jnp.asarray(rt.edge_sid.astype(np.int32)),
             rt_leaf=jnp.asarray(rt.edge_leaf), rt_child=jnp.asarray(rt.edge_child),
             rt_lo=jnp.asarray(rt.edge_lo), rt_hi=jnp.asarray(rt.edge_hi),
+            rt_nl=jnp.asarray(rt.edge_nl), rt_begin=jnp.asarray(rt.edge_begin),
+            rt_end=jnp.asarray(rt.edge_end),
+            node_begin=jnp.asarray(rt.node_begin),
+            node_end=jnp.asarray(rt.node_end),
+            leaf_parent=jnp.asarray(rt.leaf_parent),
+            grp_off=jnp.asarray(rt.grp_off),
+            grp_begin=jnp.asarray(grp_begin), grp_end=jnp.asarray(grp_end),
+            grp_lo=jnp.asarray(grp_lo), grp_hi=jnp.asarray(grp_hi),
             n=n, w=w, chunk=chunk_eff, depth=rt.depth,
             lmax=max(int(np.diff(offs).max()) if L else 1, 1),
             total=total,
             has_duplicates=index.stats.n_duplicates > 0,
             max_replica=int(index.params.max_replica),
             row_bounds=row_bounds,
+            gmax=gmax,
+            leaf_bounds=tuple(int(c) for c in cut_leaf),
         )
         return dev
 
@@ -293,7 +337,7 @@ jax.tree_util.register_pytree_node(DeviceIndex, _flatten, _unflatten)
 def abstract_device_index(n_series: int, length: int, w: int, *,
                           n_shards: int = 1, chunk: int = 4096,
                           n_leaves: int = 4096, lam_max: int = 4,
-                          depth: int = 8) -> DeviceIndex:
+                          depth: int = 8, gmax: int = 64) -> DeviceIndex:
     """A ShapeDtypeStruct-leaved DeviceIndex for lower/compile dry-runs:
     equal-sized leaves, evenly divided shards (no data, shapes only)."""
     S = max(int(n_shards), 1)
@@ -305,6 +349,7 @@ def abstract_device_index(n_series: int, length: int, w: int, *,
     E = Ls + W
     M = max(n_leaves // 4, 1)
     Eg = max(n_leaves, 1)
+    G = Eg + gmax
     f32, i32, b8 = jnp.float32, jnp.int32, jnp.bool_
     sds = jax.ShapeDtypeStruct
     return DeviceIndex(
@@ -322,8 +367,17 @@ def abstract_device_index(n_series: int, length: int, w: int, *,
         rt_parent=sds((Eg,), i32), rt_sid=sds((Eg,), i32),
         rt_leaf=sds((Eg,), i32), rt_child=sds((Eg,), i32),
         rt_lo=sds((Eg, w), f32), rt_hi=sds((Eg, w), f32),
+        rt_nl=sds((Eg,), i32), rt_begin=sds((Eg,), i32),
+        rt_end=sds((Eg,), i32),
+        node_begin=sds((M,), i32), node_end=sds((M,), i32),
+        leaf_parent=sds((n_leaves,), i32),
+        grp_off=sds((M + 1,), i32),
+        grp_begin=sds((G,), i32), grp_end=sds((G,), i32),
+        grp_lo=sds((G, w), f32), grp_hi=sds((G, w), f32),
         n=length, w=w, chunk=chunk_eff, depth=depth,
         lmax=max(math.ceil(n_series / max(n_leaves, 1)), 1), total=n_series,
         has_duplicates=False, max_replica=3,
         row_bounds=tuple(min(s * Tp, n_series) for s in range(S + 1)),
+        gmax=gmax,
+        leaf_bounds=tuple(min(s * Ls, n_leaves) for s in range(S + 1)),
     )

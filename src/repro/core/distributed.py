@@ -102,20 +102,28 @@ def build_distributed(db: np.ndarray, params: DumpyParams | None = None
                       np.asarray(paa), np.asarray(sax), stats)
 
 
-def search_distributed(index: DumpyIndex, queries: np.ndarray, k: int
+def search_distributed(index: DumpyIndex, queries: np.ndarray, k: int,
+                       nbr: int | None = None
                        ) -> tuple[np.ndarray, np.ndarray]:
-    """Sharded exact kNN: a thin wrapper over the DeviceIndex search path.
+    """Sharded kNN: a thin wrapper over the DeviceIndex search paths.
 
     Under a mesh with a ``data`` axis the index shards leaf-aligned over it
-    and each shard runs the windowed-pruning loop locally (per-shard top-k +
-    all-gather merge); without a mesh this is the single-device program.
-    Unlike the retired one-shot plan this inherits pruning, tombstones and
-    the in-merge fuzzy dedup."""
-    from .search_device import exact_search_device_batch
+    and each shard runs its scan locally (per-shard top-k + all-gather
+    merge); without a mesh this is the single-device program.  ``nbr`` is
+    the recall/latency knob: ``None`` runs the exact windowed-pruning
+    search, an integer runs the extended approximate search (paper Alg. 4 —
+    the target subtree plus up to ``nbr-1`` lower-bound-ordered sibling
+    leaves).  Both inherit tombstones and the in-merge fuzzy dedup."""
+    from .search_device import (exact_search_device_batch,
+                                extended_search_device_batch)
     mesh = get_mesh()
     if mesh is not None and "data" not in mesh.axis_names:
         mesh = None
-    ids, d, _ = exact_search_device_batch(index, queries, k, mesh=mesh)
+    if nbr is not None:
+        ids, d, _ = extended_search_device_batch(index, queries, k,
+                                                 nbr=nbr, mesh=mesh)
+    else:
+        ids, d, _ = exact_search_device_batch(index, queries, k, mesh=mesh)
     return ids, d
 
 
@@ -142,10 +150,36 @@ def lower_search_sharded(mesh, *, n_series: int = 1 << 22, length: int = 256,
     return jitted.lower(dev_abs, paa_abs, q_abs)
 
 
+def lower_search_extended(mesh, *, n_series: int = 1 << 22, length: int = 256,
+                          w: int = 16, chunk: int = 8192,
+                          n_leaves: int = 16384, k: int = 58, nbr: int = 8,
+                          q_batch: int = 64):
+    """Lower the DeviceIndex batched extended search (Alg. 4 descent +
+    sibling schedule + shard-local leaf scan) on ``mesh`` with production
+    shardings.  Returns the jax ``Lowered`` object."""
+    from .device_index import abstract_device_index
+    from .search_device import _extended_knn_sharded, _mesh_shards
+
+    dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    dev_abs = abstract_device_index(n_series, length, w,
+                                    n_shards=_mesh_shards(mesh),
+                                    chunk=chunk, n_leaves=n_leaves)
+    search_n = lambda d, paa, sq, q: _extended_knn_sharded(
+        d, paa, sq, q, k=k, nbr=nbr, subtree=True)
+    jitted = jax.jit(search_n,
+                     in_shardings=(dev_abs.shardings(mesh, dp),
+                                   None, None, None))
+    paa_abs = jax.ShapeDtypeStruct((q_batch, w), jnp.float32)
+    sax_abs = jax.ShapeDtypeStruct((q_batch, w), jnp.int32)
+    q_abs = jax.ShapeDtypeStruct((q_batch, length), jnp.float32)
+    return jitted.lower(dev_abs, paa_abs, sax_abs, q_abs)
+
+
 def dryrun_cells(mesh) -> dict:
     """Extra §Roofline cells for the paper's own technique: lower+compile the
-    distributed build step, the one-shot search and the DeviceIndex sharded
-    windowed search on the production mesh."""
+    distributed build step, the one-shot search, the DeviceIndex sharded
+    windowed search and the sharded extended (Alg. 4) search on the
+    production mesh."""
     out = {}
     w, b = 16, 8
     n_series, length = 1 << 20, 256            # 1M × 256 per-cell stand-in
@@ -168,4 +202,8 @@ def dryrun_cells(mesh) -> dict:
         lo3 = lower_search_sharded(mesh, n_series=n_series, length=length,
                                    w=w, chunk=4096, n_leaves=L)
         out["dumpy_search_sharded"] = lo3.compile()
+
+        lo4 = lower_search_extended(mesh, n_series=n_series, length=length,
+                                    w=w, chunk=4096, n_leaves=L)
+        out["dumpy_search_extended"] = lo4.compile()
     return out

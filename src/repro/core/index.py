@@ -53,6 +53,14 @@ class FlatRouting:
     child tables are concatenated into one edge list grouped by parent, in the
     host dict's insertion order — ``argmin`` tie-breaking on the empty-region
     fallback then matches ``min()`` over ``children.values()`` exactly.
+
+    The sibling tables extend the flattening to the *subtree* structure that
+    extended search (paper Alg. 4) schedules over.  ``collect_leaves`` assigns
+    leaf ids by a sorted-sid DFS, so the leaves under any node form one
+    contiguous id span; every edge and every internal node carries its span,
+    each leaf knows its parent group, and each internal node's *distinct*
+    children (packs appear once however many sids route to them) are listed
+    begin-sorted so a leaf's owning sibling is a ``searchsorted`` away.
     """
     node_csl: np.ndarray      # [M, lam_max] int32 chosen segments, -1 padded
     node_shift: np.ndarray    # [M, lam_max] int32 next-bit shift (b-1-card)
@@ -63,15 +71,66 @@ class FlatRouting:
     edge_child: np.ndarray    # [E] int32 internal node id, or -1 for leaves
     edge_lo: np.ndarray       # [E, w] float32 child region bounds (clamped)
     edge_hi: np.ndarray       # [E, w] float32
+    # -- sibling / subtree tables (extended search, Alg. 4) ------------------
+    edge_nl: np.ndarray       # [E] int32 #leaves under the edge target
+    edge_begin: np.ndarray    # [E] int32 contiguous leaf span of the target
+    edge_end: np.ndarray      # [E] int32
+    node_begin: np.ndarray    # [M] int32 per-internal-node subtree leaf span
+    node_end: np.ndarray      # [M] int32
+    leaf_parent: np.ndarray   # [L] int32 parent internal node (-1: root leaf)
+    grp_off: np.ndarray       # [M+1] int32 distinct-children group offsets
+    grp_begin: np.ndarray     # [G] int32 member spans, begin-sorted per group
+    grp_end: np.ndarray       # [G] int32
+    grp_lo: np.ndarray        # [G, w] float32 member region bounds (clamped)
+    grp_hi: np.ndarray        # [G, w] float32
     depth: int                # max #descent steps to reach any leaf
 
     @property
     def n_nodes(self) -> int:
         return len(self.node_lam)
 
+    @property
+    def gmax(self) -> int:
+        """Max distinct children of any internal node (schedule gather width)."""
+        if len(self.grp_off) <= 1:
+            return 1
+        return max(int(np.diff(self.grp_off).max()), 1)
+
+
+def _subtree_spans(root: TreeNode) -> dict[int, tuple[int, int]]:
+    """``id(node) → (leaf_begin, leaf_end)`` contiguous leaf-id span of every
+    node's subtree.  Leaf ids come from :func:`flatten_tree`'s sorted-sid DFS,
+    so the span of a node is the union of its distinct children's spans and is
+    contiguous by construction."""
+    memo: dict[int, tuple[int, int]] = {}
+
+    def rec(node: TreeNode) -> tuple[int, int]:
+        key = id(node)
+        if key in memo:
+            return memo[key]
+        if node.is_leaf:
+            sp = (int(node.leaf_id), int(node.leaf_id) + 1)
+        else:
+            b_, e_ = None, None
+            seen: set[int] = set()
+            for child in node.children.values():
+                if id(child) in seen:
+                    continue
+                seen.add(id(child))
+                cb, ce = rec(child)
+                b_ = cb if b_ is None else min(b_, cb)
+                e_ = ce if e_ is None else max(e_, ce)
+            sp = (b_ or 0, e_ or 0)
+        memo[key] = sp
+        return sp
+
+    rec(root)
+    return memo
+
 
 def flatten_routing(root: TreeNode, b: int) -> FlatRouting:
-    """Assign internal-node ids breadth-first and emit the edge table.
+    """Assign internal-node ids breadth-first and emit the edge, span and
+    sibling-group tables.
 
     Requires leaf ids already assigned by :func:`flatten_tree`.
     """
@@ -90,36 +149,74 @@ def flatten_routing(root: TreeNode, b: int) -> FlatRouting:
                 seen.add(id(child))
                 queue.append(child)
 
+    spans = _subtree_spans(root)
+    L = max(spans[id(root)][1], 1)
     M = len(internal)
     w = root.sym.shape[0]
     lam_max = max((len(n.csl) for n in internal), default=1)
     node_csl = np.full((M, lam_max), -1, np.int32)
     node_shift = np.zeros((M, lam_max), np.int32)
     node_lam = np.zeros(M, np.int32)
+    node_begin = np.zeros(M, np.int32)
+    node_end = np.zeros(M, np.int32)
+    leaf_parent = np.full(L, -1, np.int32)
     ep, es, el, ec, lo_rows, hi_rows = [], [], [], [], [], []
+    enl, ebg, eed = [], [], []
+    grp_off = np.zeros(M + 1, np.int32)
+    gb, ge, glo, ghi = [], [], [], []
     depth = 0
     for m, node in enumerate(internal):
         node_lam[m] = len(node.csl)
+        node_begin[m], node_end[m] = spans[id(node)]
         for pos, seg in enumerate(node.csl):
             node_csl[m, pos] = seg
             node_shift[m, pos] = b - 1 - int(node.card[seg])
+        members: list[TreeNode] = []
+        seen_c: set[int] = set()
         for sid, child in node.children.items():
             tgt = node.routing.get(sid) or child
             ep.append(m)
             es.append(int(sid))
             el.append(int(tgt.leaf_id) if tgt.is_leaf else -1)
             ec.append(-1 if tgt.is_leaf else ids[id(tgt)])
+            sb, se_ = spans[id(tgt)]
+            enl.append(se_ - sb)
+            ebg.append(sb)
+            eed.append(se_)
             lo, hi = node_bounds_np(tgt.sym[None, :], tgt.card[None, :], b)
             lo_rows.append(lo[0])
             hi_rows.append(hi[0])
+            if id(tgt) not in seen_c:
+                seen_c.add(id(tgt))
+                members.append(tgt)
+                if tgt.is_leaf:
+                    leaf_parent[tgt.leaf_id] = m
+        # sibling group: distinct children, begin-sorted (spans are disjoint
+        # so the begin is a unique key — the device schedule searchsorts it)
+        members.sort(key=lambda c: spans[id(c)][0])
+        grp_off[m + 1] = grp_off[m] + len(members)
+        for c in members:
+            cb, ce = spans[id(c)]
+            gb.append(cb)
+            ge.append(ce)
+            clo, chi = node_bounds_np(c.sym[None, :], c.card[None, :], b)
+            glo.append(clo[0])
+            ghi.append(chi[0])
         depth = max(depth, node.depth + 1)
     E = len(ep)
+    G = len(gb)
     return FlatRouting(
         node_csl, node_shift, node_lam,
         np.asarray(ep, np.int32), np.asarray(es, np.int64),
         np.asarray(el, np.int32), np.asarray(ec, np.int32),
         (np.stack(lo_rows) if E else np.zeros((0, w), np.float32)),
         (np.stack(hi_rows) if E else np.zeros((0, w), np.float32)),
+        np.asarray(enl, np.int32), np.asarray(ebg, np.int32),
+        np.asarray(eed, np.int32),
+        node_begin, node_end, leaf_parent, grp_off,
+        np.asarray(gb, np.int32), np.asarray(ge, np.int32),
+        (np.stack(glo) if G else np.zeros((0, w), np.float32)),
+        (np.stack(ghi) if G else np.zeros((0, w), np.float32)),
         max(depth, 1))
 
 

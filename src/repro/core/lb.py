@@ -140,15 +140,9 @@ def dtw_np(a: np.ndarray, b_: np.ndarray, r: int) -> float:
     return float(np.sqrt(prev[m]))
 
 
-@functools.partial(jax.jit, static_argnums=(2,))
-def dtw_batch_jnp(q: jax.Array, xs: jax.Array, r: int) -> jax.Array:
-    """Banded DTW of one query vs a batch: ``q [n]``, ``xs [m, n]`` → ``[m]``.
-
-    Row-wise DP via ``lax.scan``; each carried row is the full length-n
-    frontier with out-of-band cells masked to +inf.  O(n^2) cells but
-    vectorized over the candidate batch — the band mask keeps the *math*
-    identical to the banded reference.
-    """
+def _dtw_scan(q: jax.Array, xs: jax.Array, r: int) -> jax.Array:
+    """Banded DTW DP of one query vs a candidate batch (traceable body shared
+    by the single-query and query-batched wrappers)."""
     n = q.shape[0]
     m = xs.shape[0]
     INF = jnp.float32(jnp.inf)
@@ -176,3 +170,86 @@ def dtw_batch_jnp(q: jax.Array, xs: jax.Array, r: int) -> jax.Array:
     prev0 = jnp.full((m, n), INF)
     last, _ = jax.lax.scan(row, prev0, jnp.arange(n))
     return jnp.sqrt(last[:, n - 1])
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def dtw_batch_jnp(q: jax.Array, xs: jax.Array, r: int) -> jax.Array:
+    """Banded DTW of one query vs a batch: ``q [n]``, ``xs [m, n]`` → ``[m]``.
+
+    Row-wise DP via ``lax.scan``; each carried row is the full length-n
+    frontier with out-of-band cells masked to +inf.  O(n^2) cells but
+    vectorized over the candidate batch — the band mask keeps the *math*
+    identical to the banded reference.
+    """
+    return _dtw_scan(q, xs, r)
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def dtw_batch_queries_jnp(qs: jax.Array, xs: jax.Array, r: int,
+                          mask: jax.Array | None = None) -> jax.Array:
+    """Banded DTW of a *query batch* vs a candidate batch:
+    ``qs [Q, n]``, ``xs [m, n]`` → ``[Q, m]`` — the row DP of
+    :func:`dtw_batch_jnp` vmapped over queries (ROADMAP: batched DTW).
+
+    ``mask [Q, m]`` is the LB_Keogh pre-filter hook: masked-out entries
+    (``False``) come back as ``+inf``.  Under plain jnp the DP cost is still
+    paid (XLA has no dynamic shapes); on TPU the same mask becomes the skip
+    predicate of the fused while_loop kernel, which is why it threads through
+    here rather than being applied by callers."""
+    d = jax.vmap(lambda q: _dtw_scan(q, xs, r))(qs)
+    if mask is not None:
+        d = jnp.where(mask, d, jnp.inf)
+    return d
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def dtw_envelope_batch_jnp(qs: jax.Array, r: int) -> tuple[jax.Array, jax.Array]:
+    """LB_Keogh envelopes for a query batch: ``qs [Q, n]`` → ``(U, L)``
+    ``[Q, n]`` each — the batched :func:`dtw_envelope_np` (windowed max/min
+    with edge clamping via ±inf padding)."""
+    win = 2 * r + 1
+    U = jax.lax.reduce_window(qs, -jnp.inf, jax.lax.max, (1, win), (1, 1),
+                              [(0, 0), (r, r)])
+    L = jax.lax.reduce_window(qs, jnp.inf, jax.lax.min, (1, win), (1, 1),
+                              [(0, 0), (r, r)])
+    return U, L
+
+
+@jax.jit
+def lb_keogh_batch_jnp(xs: jax.Array, U: jax.Array, L: jax.Array) -> jax.Array:
+    """LB_Keogh of every candidate against every query envelope:
+    ``xs [m, n]``, ``U/L [Q, n]`` → ``[Q, m]`` (one ``[Q, m, n]`` temporary —
+    callers chunk ``m`` at scale)."""
+    above = jnp.maximum(xs[None, :, :] - U[:, None, :], 0.0)
+    below = jnp.maximum(L[:, None, :] - xs[None, :, :], 0.0)
+    d = jnp.maximum(above, below)
+    return jnp.sqrt((d * d).sum(-1))
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def dtw_topk_batch_jnp(qs: jax.Array, xs: jax.Array, r: int, k: int
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Exact banded-DTW top-k for a query batch with LB_Keogh pre-filtering:
+    ``qs [Q, n]``, ``xs [m, n]`` → ``(d [Q, kk], ids [Q, kk])`` with
+    ``kk = min(k, m)`` (fewer candidates than ``k`` narrows the result —
+    callers that need a fixed ``k`` pad like the search paths do).
+
+    Seeds the cutoff τ from exact DTW on the ``k`` best candidates by
+    LB_Keogh, then only candidates with ``LB_Keogh < τ`` keep their exact
+    distance in the candidate scan (every true top-k member has
+    ``LB ≤ d < τ``, so the result distances are exact).  The mask is the
+    pruning structure the fused TPU kernel consumes; under jnp it is a
+    where-mask over the vmapped DP."""
+    m = xs.shape[0]
+    kk = min(k, m)
+    U, L = dtw_envelope_batch_jnp(qs, r)
+    lbk = lb_keogh_batch_jnp(xs, U, L)                      # [Q, m]
+    _, seed = jax.lax.top_k(-lbk, kk)                       # [Q, kk]
+    seed_d = jax.vmap(lambda q, s: _dtw_scan(q, xs[s], r))(qs, seed)
+    tau = seed_d.max(axis=1)                                # kth-best seed
+    mask = lbk < tau[:, None]
+    mask = jnp.zeros_like(mask).at[
+        jnp.arange(qs.shape[0])[:, None], seed].set(True) | mask
+    d = dtw_batch_queries_jnp(qs, xs, r, mask)
+    neg, ids = jax.lax.top_k(-d, kk)
+    return -neg, ids

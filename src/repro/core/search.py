@@ -120,34 +120,62 @@ def approximate_search(index: DumpyIndex, q: np.ndarray, k: int,
 
 def extended_search(index: DumpyIndex, q: np.ndarray, k: int, nbr: int,
                     metric: str = "ed") -> tuple[np.ndarray, np.ndarray, SearchStats]:
+    """Extended approximate search (paper Alg. 4): widen the approximate
+    answer to lower-bound-ordered *sibling subtrees* of the target.
+
+    Visit schedule (mirrored bit-for-bit by the batched device path in
+    ``search_device.extended_search_device_batch``):
+
+    1. descend by sid while the current subtree holds more than ``nbr``
+       leaves; empty regions fall back to the min-LB child exactly like
+       ``route_to_leaf`` (the old dead-end descent stopped with a stale
+       parent and an arbitrary sibling set);
+    2. the target subtree is visited *first* and completely (it holds at
+       most ``nbr`` leaves, so with ``nbr=1`` this degenerates bitwise to
+       ``approximate_search`` — and growing ``nbr`` only ever adds leaves,
+       which makes the k-th distance monotone in ``nbr``);
+    3. the remaining siblings follow ordered by (MINDIST, leaf span), and
+       inside every subtree leaves are visited by (MINDIST, leaf id) — the
+       node ordering Alg. 4 prescribes (leaves used to be visited in
+       arbitrary traversal order) — until ``nbr`` leaves have been read.
+    """
     paa_q, sax_q = _encode_query(index, q)
     b, n = index.params.sax.b, index.n
     band = max(1, int(0.1 * n))
+    nbr = max(int(nbr), 1)
 
-    # descend to the smallest subtree around the target with <= nbr leaves
     parent, node = None, index.root
-    while node is not None and not node.is_leaf and node.n_leaves > nbr:
+    while not node.is_leaf and node.n_leaves > nbr:
         sid = node.route_sid(sax_q, b)
-        parent, node = node, (node.routing.get(sid) or node.children.get(sid))
+        child = node.routing.get(sid) or node.children.get(sid)
+        if child is None:   # empty region → most promising existing child
+            child = min(node.children.values(),
+                        key=lambda c: _node_lb(c, paa_q, n, b))
+        parent, node = node, child
 
-    siblings: list[TreeNode]
+    ordered: list[TreeNode]
     if parent is None:          # whole tree is within budget
-        siblings = [node] if node is not None else []
+        ordered = [node]
     else:
-        seen: set[int] = set()
-        siblings = []
+        seen: set[int] = {id(node)}
+        siblings: list[TreeNode] = []
         for c in parent.children.values():
             if id(c) not in seen:
                 seen.add(id(c))
                 siblings.append(c)
-    siblings.sort(key=lambda c: _node_lb(c, paa_q, n, b))
+        siblings.sort(key=lambda c: (_node_lb(c, paa_q, n, b),
+                                     _subtree_begin(c)))
+        ordered = [node] + siblings
 
     heap: list = []
     stats = SearchStats()
-    for sib in siblings:
+    for sub in ordered:
         if stats.leaves_visited >= nbr:
             break
-        for leaf in _leaves_under(sib):
+        leaves = sorted(_leaves_under(sub),
+                        key=lambda lf: (_node_lb(lf, paa_q, n, b),
+                                        lf.leaf_id))
+        for leaf in leaves:
             if stats.leaves_visited >= nbr:
                 break
             ids, xs = _leaf_candidates(index, leaf.leaf_id)
@@ -174,6 +202,13 @@ def _leaves_under(node: TreeNode) -> list[TreeNode]:
 
     rec(node)
     return out
+
+
+def _subtree_begin(node: TreeNode) -> int:
+    """Smallest leaf id under ``node`` — the unique sibling tie-break key
+    (subtree leaf spans are contiguous and disjoint, see
+    ``index._subtree_spans``)."""
+    return min(lf.leaf_id for lf in _leaves_under(node))
 
 
 # ---------------------------------------------------------------------------

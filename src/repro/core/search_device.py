@@ -38,6 +38,13 @@ Approximate search is batched by flattening the host routing tree into
 arrays (held by the ``DeviceIndex``) so the root→leaf dict-walk becomes a
 vectorized ``fori_loop`` descent over the whole query batch; its leaf scan
 addresses the flattened ``[S·Tp, n]`` view of the shard layout.
+
+Extended search (paper Alg. 4) reuses the same descent but stops at the
+smallest subtree within the ``nbr`` leaf budget, builds a per-query visit
+schedule from the sibling routing tables (target subtree first, remaining
+siblings by lower bound, leaves by lower bound within each), and scans the
+schedule shard-locally before the same all-gather dedup merge — see
+``extended_search_device_batch``.
 """
 from __future__ import annotations
 
@@ -176,6 +183,9 @@ def _finalize_exact(index: DumpyIndex, qs: np.ndarray, ids_dev: np.ndarray,
     sort by (d, id) — exactly the host heap's order.  Device invalid slots
     (``id -1``) stay padded as ``-1 / inf``."""
     Q, kk = ids_dev.shape
+    if index.db.shape[0] == 0:                              # empty collection
+        return (np.full((Q, k), -1, np.int64),
+                np.full((Q, k), np.inf, np.float32))
     cand = index.db[np.maximum(ids_dev, 0)]                 # [Q, kk, n]
     diff = cand - qs[:, None, :]
     d = np.sqrt((diff * diff).sum(axis=-1)).astype(np.float32)
@@ -241,41 +251,51 @@ def exact_search_device(index: DumpyIndex, q: np.ndarray, k: int,
 # batched approximate search (vectorized root→leaf descent)
 # ---------------------------------------------------------------------------
 
+def _route_edges(sax_q: jax.Array, cur: jax.Array, node_csl: jax.Array,
+                 node_shift: jax.Array, node_lam: jax.Array,
+                 edge_parent: jax.Array, edge_sid: jax.Array,
+                 edge_lb: jax.Array) -> jax.Array:
+    """One routing step for a query batch sitting at internal nodes ``cur``:
+    recompute each query's sid from the node's chosen segments (promoteiSAX
+    bit extraction), match it against the node's edge span, and fall back to
+    the min-LB child for empty regions — bit-for-bit the host descent
+    including argmin tie-breaking.  Returns the taken edge index per query."""
+    w = sax_q.shape[1]
+    lam_max = node_csl.shape[1]
+    pos = jnp.arange(lam_max)
+    curc = jnp.clip(cur, 0, node_csl.shape[0] - 1)
+    csl = node_csl[curc]                        # [Q, lam_max]
+    shift = node_shift[curc]
+    lam = node_lam[curc]
+    segs = jnp.clip(csl, 0, w - 1)
+    bits = (jnp.take_along_axis(sax_q, segs, axis=1) >> shift) & 1
+    weights = jnp.where(
+        pos[None, :] < lam[:, None],
+        1 << jnp.maximum(lam[:, None] - 1 - pos[None, :], 0), 0)
+    sid = (bits * weights).sum(axis=1)          # [Q]
+    eligible = edge_parent[None, :] == curc[:, None]              # [Q, E]
+    hit = eligible & (edge_sid[None, :] == sid[:, None])
+    any_hit = hit.any(axis=1)
+    hit_idx = jnp.argmax(hit, axis=1)
+    fb_idx = jnp.argmin(jnp.where(eligible, edge_lb, jnp.inf), axis=1)
+    return jnp.where(any_hit, hit_idx, fb_idx)
+
+
 @functools.partial(jax.jit, static_argnames=("depth",))
 def _descend_device(sax_q: jax.Array, node_csl: jax.Array,
                     node_shift: jax.Array, node_lam: jax.Array,
                     edge_parent: jax.Array, edge_sid: jax.Array,
                     edge_leaf: jax.Array, edge_child: jax.Array,
                     edge_lb: jax.Array, *, depth: int) -> jax.Array:
-    """Lockstep root→leaf routing of a query batch over the flat tables.
-
-    Per level: recompute each query's sid from the current node's chosen
-    segments (promoteiSAX bit extraction), match it against the node's edge
-    span, and fall back to the min-LB child for empty regions — bit-for-bit
-    the host ``search.route_to_leaf`` including argmin tie-breaking."""
-    Q, w = sax_q.shape
-    lam_max = node_csl.shape[1]
-    pos = jnp.arange(lam_max)
+    """Lockstep root→leaf routing of a query batch over the flat tables —
+    the host ``search.route_to_leaf`` vectorized (one step per tree level)."""
+    Q = sax_q.shape[0]
 
     def step(_, carry):
         cur, leaf = carry                       # [Q]; leaf stays -1 en route
         active = leaf < 0
-        curc = jnp.clip(cur, 0, node_csl.shape[0] - 1)
-        csl = node_csl[curc]                    # [Q, lam_max]
-        shift = node_shift[curc]
-        lam = node_lam[curc]
-        segs = jnp.clip(csl, 0, w - 1)
-        bits = (jnp.take_along_axis(sax_q, segs, axis=1) >> shift) & 1
-        weights = jnp.where(
-            pos[None, :] < lam[:, None],
-            1 << jnp.maximum(lam[:, None] - 1 - pos[None, :], 0), 0)
-        sid = (bits * weights).sum(axis=1)      # [Q]
-        eligible = edge_parent[None, :] == curc[:, None]          # [Q, E]
-        hit = eligible & (edge_sid[None, :] == sid[:, None])
-        any_hit = hit.any(axis=1)
-        hit_idx = jnp.argmax(hit, axis=1)
-        fb_idx = jnp.argmin(jnp.where(eligible, edge_lb, jnp.inf), axis=1)
-        e = jnp.where(any_hit, hit_idx, fb_idx)
+        e = _route_edges(sax_q, cur, node_csl, node_shift, node_lam,
+                         edge_parent, edge_sid, edge_lb)
         nxt_leaf = edge_leaf[e]
         nxt_cur = edge_child[e]
         leaf = jnp.where(active, nxt_leaf, leaf)
@@ -373,3 +393,189 @@ def approximate_search_device_batch(index: DumpyIndex, qs: np.ndarray, k: int,
                                         k=k_out, kk=kk, nbr=nbr)
     return (np.asarray(ids).astype(np.int64), np.sqrt(np.asarray(d2)),
             np.asarray(leaves))
+
+
+# ---------------------------------------------------------------------------
+# batched extended search — Algorithm 4 (sibling subtrees, LB-ordered)
+# ---------------------------------------------------------------------------
+
+def _descend_subtree(dev: DeviceIndex, sax_q: jax.Array, edge_lb: jax.Array,
+                     *, nbr: int) -> tuple[jax.Array, jax.Array]:
+    """Root→subtree descent of a query batch: follow sids (min-LB fallback on
+    empty regions) while the child subtree still holds more than ``nbr``
+    leaves.  Returns ``(parent node id [Q], stop edge index [Q])`` — the stop
+    edge's target is the host descent's stop node, its parent the node whose
+    children form the sibling set."""
+    Q = sax_q.shape[0]
+
+    def step(_, carry):
+        cur, pm, se, done = carry
+        e = _route_edges(sax_q, cur, dev.node_csl, dev.node_shift,
+                         dev.node_lam, dev.rt_parent, dev.rt_sid, edge_lb)
+        stop = (~done) & ((dev.rt_leaf[e] >= 0) | (dev.rt_nl[e] <= nbr))
+        curc = jnp.clip(cur, 0, dev.node_csl.shape[0] - 1)
+        pm = jnp.where(stop, curc, pm)
+        se = jnp.where(stop, e, se)
+        done = done | stop
+        cur = jnp.where(done, cur, dev.rt_child[e])
+        return cur, pm, se, done
+
+    init = (jnp.zeros(Q, jnp.int32), jnp.zeros(Q, jnp.int32),
+            jnp.zeros(Q, jnp.int32), jnp.zeros(Q, bool))
+    _, pm, se, _ = jax.lax.fori_loop(0, dev.depth, step, init)
+    return pm, se
+
+
+def _sibling_schedule(dev: DeviceIndex, paa_q: jax.Array, lbq: jax.Array,
+                      pm: jax.Array, se: jax.Array, *, nbr: int) -> jax.Array:
+    """Per-query leaf visit schedule ``[Q, nbr]`` over the stop subtree.
+
+    Mirrors the host order exactly: the target subtree (the stop edge's
+    span) ranks first, the remaining siblings of the parent group by
+    (MINDIST, span begin), and leaves inside every subtree by
+    (MINDIST, leaf id); the overall schedule is the ``nbr`` smallest
+    (sibling rank, leaf LB, leaf id) keys, which equals the host's
+    budget-truncated walk because sibling spans partition the parent span."""
+    Q, L = lbq.shape
+    gmax = dev.gmax
+    i32max = jnp.iinfo(jnp.int32).max
+    tb = dev.rt_begin[se]                                     # [Q]
+    goff = dev.grp_off[pm]
+    gcnt = dev.grp_off[pm + 1] - goff
+    gi = goff[:, None] + jnp.arange(gmax, dtype=jnp.int32)[None, :]
+    gi = jnp.clip(gi, 0, dev.grp_begin.shape[0] - 1)          # [Q, gmax]
+    valid = jnp.arange(gmax)[None, :] < gcnt[:, None]
+    m_begin = jnp.where(valid, dev.grp_begin[gi], i32max)
+    # member MINDIST (squared — order-equal to the host's sqrt form)
+    below = jnp.maximum(dev.grp_lo[gi] - paa_q[:, None, :], 0.0)
+    above = jnp.maximum(paa_q[:, None, :] - dev.grp_hi[gi], 0.0)
+    d = jnp.maximum(below, above)
+    sib_lb = (dev.n / dev.w) * (d * d).sum(-1)                # [Q, gmax]
+    sib_lb = jnp.where(valid, sib_lb, jnp.inf)
+    sib_lb = jnp.where(m_begin == tb[:, None], -jnp.inf, sib_lb)
+    # member visit rank: (LB, span begin), target forced first by the -inf
+    perm = jnp.lexsort((m_begin, sib_lb), axis=-1)
+    rank = jnp.argsort(perm, axis=-1).astype(jnp.int32)       # inverse perm
+    # owning member of every leaf: spans are begin-sorted and partition the
+    # parent span, so one searchsorted per query resolves membership
+    leaf_ids = jnp.arange(L, dtype=jnp.int32)
+    sidx = jax.vmap(
+        lambda mb: jnp.searchsorted(mb, leaf_ids, side="right"))(m_begin) - 1
+    sidx = jnp.clip(sidx, 0, gmax - 1)
+    leaf_rank = jnp.take_along_axis(rank, sidx, axis=1)       # [Q, L]
+    under = (leaf_ids[None, :] >= dev.node_begin[pm][:, None]) & \
+            (leaf_ids[None, :] < dev.node_end[pm][:, None])
+    leaf_rank = jnp.where(under, leaf_rank, gmax + 1)
+    order = jnp.lexsort((lbq, leaf_rank), axis=-1)            # stable → id
+    return order[:, :nbr].astype(jnp.int32)
+
+
+def _scan_leaf_schedule(dev: DeviceIndex, qs: jax.Array, leaves: jax.Array,
+                        *, k: int) -> tuple[jax.Array, jax.Array]:
+    """Visit the per-query leaf schedule shard-locally and merge.
+
+    Each shard owns the contiguous leaf range ``leaf_bounds[s:s+2]`` of the
+    leaf-aligned layout; it scans only the scheduled leaves inside that range
+    (the rest mask to ``+inf``), producing a local ``[Q, k]`` top-k.  The
+    ``[S, Q, k]`` locals then merge exactly like the exact path: transpose/
+    reshape (the all-gather under a ``data`` sharding) + segment-min dedup +
+    top-k — so results are bitwise invariant to the shard count."""
+    Q, nbr = leaves.shape
+    lmax, n, L = dev.lmax, dev.n, dev.n_leaves
+    S, Tp = dev.n_shards, dev.shard_rows
+    row0 = jnp.asarray([s * Tp for s in range(S)], jnp.int32)
+    lcut = jnp.asarray(dev.leaf_bounds, jnp.int32)
+
+    def per_shard(db_s, alive_s, ids_s, r0, a, z):
+        def body(j, carry):
+            topd, topi = carry
+            lf = leaves[:, j]                                 # [Q]
+            mine = (lf >= a) & (lf < z)
+            lfc = jnp.clip(lf, 0, L - 1)
+            starts = dev.leaf_start[lfc] - r0                 # shard-local
+            sizes = jnp.where(mine, dev.leaf_size[lfc], 0)
+            rows = starts[:, None] + jnp.arange(lmax)[None, :]
+            rows_c = jnp.clip(rows, 0, Tp - 1)                # [Q, lmax]
+            cand = db_s[rows_c]                               # [Q, lmax, n]
+            d2 = ((cand - qs[:, None, :]) ** 2).sum(-1)
+            val = (jnp.arange(lmax)[None, :] < sizes[:, None]) \
+                & alive_s[rows_c]
+            d2 = jnp.where(val, d2, jnp.inf)
+            idt = jnp.where(val, ids_s[rows_c], -1)
+            return ops.topk_merge(topd, topi, d2, idt)
+
+        init = (jnp.full((Q, k), jnp.inf, jnp.float32),
+                jnp.full((Q, k), -1, jnp.int32))
+        return jax.lax.fori_loop(0, nbr, body, init)
+
+    topd, topi = jax.vmap(per_shard)(dev.db, dev.alive, dev.ids,
+                                     row0, lcut[:-1], lcut[1:])
+    alld = jnp.moveaxis(topd, 0, 1).reshape(Q, S * k)
+    alli = jnp.moveaxis(topi, 0, 1).reshape(Q, S * k)
+    return _dedup_topk(alld, alli, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "nbr", "subtree"))
+def _extended_knn_sharded(dev: DeviceIndex, paa_q: jax.Array,
+                          sax_q: jax.Array, qs: jax.Array, *, k: int,
+                          nbr: int, subtree: bool
+                          ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched Alg. 4 as one XLA program: descent → sibling schedule →
+    shard-local scan → all-gather dedup merge.  With ``subtree=False`` (the
+    whole tree fits the ``nbr`` budget, or the root is the only leaf) the
+    schedule is simply every leaf by (LB, leaf id) — the host's
+    ``parent is None`` branch."""
+    lbq = ops.lb_isax(paa_q, dev.leaf_lo_g, dev.leaf_hi_g, dev.n)
+    if subtree:
+        edge_lb = ops.lb_isax(paa_q, dev.rt_lo, dev.rt_hi, dev.n)
+        pm, se = _descend_subtree(dev, sax_q, edge_lb, nbr=nbr)
+        leaves = _sibling_schedule(dev, paa_q, lbq, pm, se, nbr=nbr)
+    else:
+        order = jnp.argsort(lbq, axis=-1)                     # stable → id
+        leaves = order[:, :nbr].astype(jnp.int32)
+    d2, ids = _scan_leaf_schedule(dev, qs, leaves, k=k)
+    return d2, ids, leaves
+
+
+def extended_search_device_batch(index: DumpyIndex, qs: np.ndarray, k: int,
+                                 nbr: int = 1, chunk: int = 2048, mesh=None,
+                                 dev: DeviceIndex | None = None,
+                                 rerank: bool = True
+                                 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Batched extended approximate kNN (paper Alg. 4, vectorized over
+    queries): ``qs [Q, n]`` → ``(ids [Q, k], d [Q, k], leaves [Q, nbr'])``
+    with ``nbr' = min(nbr, n_leaves)``; short results pad ``id -1 / d inf``.
+
+    The visit set per query is exactly the host ``extended_search`` schedule
+    (target subtree first, then LB-ordered siblings, LB-ordered leaves
+    within), so ``nbr=1`` degenerates to the approximate answer and the k-th
+    distance is monotone in ``nbr``.  With ``mesh`` (or a pre-sharded
+    ``dev``) the leaf scan runs shard-local and merges through the same
+    all-gather + segment-min dedup as the exact path — bitwise invariant to
+    the shard count.
+
+    ``rerank=True`` (default) finishes with the k-sized host re-rank for
+    bitwise (ids, dists) parity with ``extended_search``; serving passes
+    ``rerank=False`` to keep the whole path on device (ids ordered by the
+    device d², distances returned as ``sqrt`` of the device form)."""
+    qs = np.ascontiguousarray(np.atleast_2d(qs), np.float32)
+    if dev is None:
+        dev = index.device_index(chunk=chunk, n_shards=_mesh_shards(mesh),
+                                 mesh=mesh)
+    sax_p = index.params.sax
+    qs_dev = jnp.asarray(qs)
+    paa_q, sax_q = _encode_batch(qs_dev, sax_p.w, sax_p.b)
+    sax_q = sax_q.astype(jnp.int32)
+    L = dev.n_leaves
+    nbr_eff = max(min(int(nbr), L), 1)
+    subtree = dev.node_lam.shape[0] > 0 and L > nbr_eff
+    kk = _result_margin(dev, k) + (8 if rerank else 0)
+    d2, ids, leaves = _extended_knn_sharded(dev, paa_q, sax_q, qs_dev,
+                                            k=kk, nbr=nbr_eff,
+                                            subtree=subtree)
+    if rerank:
+        ids_out, d_out = _finalize_exact(index, qs, np.asarray(ids), k)
+        return ids_out, d_out, np.asarray(leaves)
+    ids_np = np.asarray(ids)[:, :k]
+    d_np = np.sqrt(np.asarray(d2))[:, :k]
+    return ids_np.astype(np.int64), d_np, np.asarray(leaves)

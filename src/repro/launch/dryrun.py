@@ -184,9 +184,11 @@ def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str,
 
 def lower_dumpy_cell(mesh, mesh_name: str, kind: str) -> dict:
     """The paper's own technique on the production mesh: distributed index
-    build (Stage 1 + root histogram), the one-shot sharded search, and the
+    build (Stage 1 + root histogram), the one-shot sharded search, the
     DeviceIndex sharded windowed-pruning search (per-shard span loop +
-    all-gather top-k merge with in-merge dedup)."""
+    all-gather top-k merge with in-merge dedup), and the sharded extended
+    (Alg. 4) search (root→subtree descent + sibling leaf schedule +
+    shard-local scan)."""
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.core.distributed import build_step, search_step
@@ -210,6 +212,13 @@ def lower_dumpy_cell(mesh, mesh_name: str, kind: str) -> dict:
             t0 = time.time()
             lowered = lower_search_sharded(mesh, n_series=n_series,
                                            length=length, w=w)
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+        elif kind == "search_extended":
+            from repro.core.distributed import lower_search_extended
+            t0 = time.time()
+            lowered = lower_search_extended(mesh, n_series=n_series,
+                                            length=length, w=w)
             compiled = lowered.compile()
             t_compile = time.time() - t0
         else:
@@ -266,7 +275,8 @@ def main() -> None:
                       "both": [False, True]}[args.mesh]:
             mesh_name = "multi_pod_2x16x16" if multi else "pod_16x16"
             mesh = make_production_mesh(multi_pod=multi)
-            for kind in ("build", "search", "search_sharded"):
+            for kind in ("build", "search", "search_sharded",
+                         "search_extended"):
                 rec = lower_dumpy_cell(mesh, mesh_name, kind)
                 path = os.path.join(args.out, f"dumpy-{kind}__{mesh_name}.json")
                 os.makedirs(args.out, exist_ok=True)

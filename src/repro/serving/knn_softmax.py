@@ -23,7 +23,7 @@ from repro.core.build import DumpyParams
 from repro.core.index import DumpyIndex
 from repro.core.sax import SaxParams
 from repro.core.search import extended_search
-from repro.core.search_device import approximate_search_device_batch
+from repro.core.search_device import extended_search_device_batch
 from repro.core.split import SplitParams
 from repro.data.series import pad_to_multiple, z_normalize
 
@@ -105,28 +105,30 @@ class KnnSoftmaxHead:
         q = (q - self.mu) / self.sd
         return np.pad(q, ((0, 0), (0, self.pad))).astype(np.float32)
 
-    def candidates_batch(self, H: np.ndarray) -> np.ndarray:
+    def candidates_batch(self, H: np.ndarray,
+                         nbr: int | None = None) -> np.ndarray:
         """Top-R candidate ids for a whole decode batch in one device program
-        (vectorized root→leaf descent + fused leaf scan).  The recall knob is
-        ``nbr_nodes``, as in the host path; extra leaves are the globally
-        next-best by MINDIST rather than subtree siblings.  Candidate ids are
-        deduped in the device merge — the whole retrieval stays on device.
-        Returns ``[B, R'] int64`` with -1 padding where a batch row found
-        fewer."""
+        (vectorized root→subtree descent + LB-ordered sibling leaf schedule —
+        the same Alg. 4 visit set as the host ``candidates`` path).  ``nbr``
+        is the per-call recall/latency knob (default: the head's
+        ``nbr_nodes``).  Candidate ids are deduped in the device merge and no
+        host re-rank runs — the whole retrieval stays on device.  Returns
+        ``[B, R] int64`` with -1 padding where a batch row found fewer."""
         # re-resolve through the index cache: a hit is a dict lookup (plus a
         # cheap tombstone-snapshot compare), so the device state uploads once
         # but deletions/inserts between decode steps are never served stale
         self.device_index = self.index.device_index()
-        ids, _, _ = approximate_search_device_batch(
-            self.index, self._encode_queries(H), self.r, nbr=self.nbr,
-            dev=self.device_index)
+        ids, _, _ = extended_search_device_batch(
+            self.index, self._encode_queries(H), self.r,
+            nbr=(self.nbr if nbr is None else nbr),
+            dev=self.device_index, rerank=False)
         return ids
 
-    def step_batch(self, H: np.ndarray,
-                   track_exact: bool = True) -> np.ndarray:
+    def step_batch(self, H: np.ndarray, track_exact: bool = True,
+                   nbr: int | None = None) -> np.ndarray:
         """Batched ``step``: one token id per row of ``H [B, d_model]``."""
         H = np.atleast_2d(np.asarray(H, np.float32))
-        cand = self.candidates_batch(H)                      # [B, R']
+        cand = self.candidates_batch(H, nbr=nbr)             # [B, R]
         logits = np.einsum("bd,dbr->br", H,
                            self.lm_head[:, np.maximum(cand, 0)])
         logits = np.where(cand >= 0, logits, -np.inf)

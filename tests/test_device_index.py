@@ -160,6 +160,43 @@ def test_serving_head_tracks_deletions():
     assert 7 not in cand2[0]
 
 
+def test_sibling_routing_tables_partition_subtrees(built):
+    """The Alg. 4 tables: every internal node's distinct-children member
+    list is begin-sorted, contiguous, and exactly partitions the node's
+    subtree span; edge spans agree; every leaf knows its parent group."""
+    db, idx = built
+    rt = idx.routing_flat
+    L = idx.flat.n_leaves
+    assert rt.node_begin[0] == 0 and rt.node_end[0] == L   # root spans all
+    for m in range(rt.n_nodes):
+        b, e = int(rt.grp_off[m]), int(rt.grp_off[m + 1])
+        gb, ge = rt.grp_begin[b:e], rt.grp_end[b:e]
+        assert len(gb) >= 1
+        assert gb[0] == rt.node_begin[m] and ge[-1] == rt.node_end[m]
+        np.testing.assert_array_equal(gb[1:], ge[:-1])     # disjoint, sorted
+    # leaf edges span exactly their leaf
+    lm = rt.edge_leaf >= 0
+    np.testing.assert_array_equal(rt.edge_begin[lm], rt.edge_leaf[lm])
+    assert (rt.edge_nl[lm] == 1).all()
+    # internal edges carry their child's node span
+    im = rt.edge_child >= 0
+    np.testing.assert_array_equal(rt.edge_begin[im],
+                                  rt.node_begin[rt.edge_child[im]])
+    np.testing.assert_array_equal(rt.edge_end[im],
+                                  rt.node_end[rt.edge_child[im]])
+    # every leaf has a parent group whose members contain it
+    assert rt.leaf_parent.shape == (L,)
+    assert (rt.leaf_parent >= 0).all()
+    for lid in range(L):
+        m = int(rt.leaf_parent[lid])
+        assert rt.node_begin[m] <= lid < rt.node_end[m]
+    # device copy pads the member tables by gmax sentinel rows
+    dev = idx.device_index()
+    assert dev.gmax == rt.gmax
+    assert dev.grp_begin.shape[0] == rt.grp_begin.shape[0] + dev.gmax
+    assert dev.leaf_bounds[0] == 0 and dev.leaf_bounds[-1] == L
+
+
 def test_dedup_happens_on_device_for_serving_path():
     """The approximate (serving) path must return already-deduped ids — no
     host fixup exists on it any more."""

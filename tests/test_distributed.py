@@ -63,9 +63,10 @@ def test_search_step_returns_per_query_min_lb():
 
 
 def test_sharded_search_multidevice_bitwise_parity_subprocess():
-    """The DeviceIndex sharded exact search on a forced 4-device host mesh
-    must be bitwise-identical to host ``exact_search`` — including fuzzy
-    duplicates (deduped in the device merge) and tombstones."""
+    """The DeviceIndex sharded exact *and extended* searches on a forced
+    4-device host mesh must be bitwise-identical to their host references —
+    including fuzzy duplicates (deduped in the device merge) and
+    tombstones."""
     code = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
@@ -77,8 +78,9 @@ from repro.core.build import DumpyParams
 from repro.core.index import DumpyIndex
 from repro.core.sax import SaxParams
 from repro.core.split import SplitParams
-from repro.core.search import exact_search
-from repro.core.search_device import exact_search_device_batch
+from repro.core.search import exact_search, extended_search
+from repro.core.search_device import (exact_search_device_batch,
+                                      extended_search_device_batch)
 from repro.data.series import random_walks
 from repro.distributed.sharding import make_mesh
 
@@ -103,6 +105,15 @@ for i, q in enumerate(qs):
     assert 3 not in got and 17 not in got           # tombstones respected
     np.testing.assert_array_equal(got, h_ids)
     np.testing.assert_array_equal(d4[i][:len(h_d)], h_d)
+for nbr in (1, 4):
+    e1, ed1, _ = extended_search_device_batch(idx, qs, 5, nbr=nbr)
+    e4, ed4, _ = extended_search_device_batch(idx, qs, 5, nbr=nbr, mesh=mesh)
+    assert (e1 == e4).all() and (ed1 == ed4).all()              # bitwise
+    for i, q in enumerate(qs):
+        h_ids, h_d, _ = extended_search(idx, q, 5, nbr)
+        got = e4[i][e4[i] >= 0]
+        np.testing.assert_array_equal(got, h_ids)
+        np.testing.assert_array_equal(ed4[i][:len(h_d)], h_d)
 print(json.dumps({"ok": True, "n_dev": len(jax.devices())}))
 """
     env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")

@@ -1,0 +1,230 @@
+"""Extended approximate search (paper Alg. 4) — host/device parity.
+
+The host ``extended_search`` schedule (target subtree first, remaining
+siblings by lower bound, leaves by lower bound within each subtree) must be
+reproduced bit-for-bit by the batched device path built on the DeviceIndex
+sibling routing tables; ``nbr=1`` must degenerate to ``approximate_search``
+and the k-th distance must be monotone in ``nbr`` — on both paths, including
+fuzzy-duplicate and tombstoned layouts.
+"""
+import numpy as np
+import pytest
+from _propcheck import given, settings, st
+
+from repro.core.baselines.brute import brute_force_knn
+from repro.core.build import DumpyParams
+from repro.core.index import DumpyIndex
+from repro.core.sax import SaxParams
+from repro.core.search import approximate_search, extended_search
+from repro.core.search_device import (exact_search_device_batch,
+                                      extended_search_device_batch)
+from repro.core.split import SplitParams
+from repro.data.series import random_walks
+
+PARAMS = DumpyParams(sax=SaxParams(w=8, b=8), split=SplitParams(th=128))
+FUZZY = DumpyParams(sax=SaxParams(w=8, b=8), split=SplitParams(th=128),
+                    fuzzy_f=0.15)
+
+
+@pytest.fixture(scope="module")
+def built():
+    db = random_walks(4000, 64, seed=0)
+    return db, DumpyIndex.build(db, PARAMS)
+
+
+@pytest.fixture(scope="module")
+def built_fuzzy():
+    db = random_walks(2500, 64, seed=2)
+    return db, DumpyIndex.build(db, FUZZY)
+
+
+def _assert_extended_parity(idx, qs, k, nbr):
+    ids, d, _ = extended_search_device_batch(idx, qs, k, nbr=nbr)
+    for i, q in enumerate(qs):
+        h_ids, h_d, _ = extended_search(idx, q, k, nbr)
+        got = ids[i][ids[i] >= 0]
+        np.testing.assert_array_equal(got, h_ids)
+        np.testing.assert_array_equal(d[i][:len(h_d)], h_d)   # bitwise
+
+
+# -- host Alg. 4 fixes -------------------------------------------------------
+
+def test_nbr1_degenerates_to_approximate_host(built):
+    """Regression: with nbr=1 the extended search must return bitwise the
+    same (ids, dists) as approximate_search — the target subtree is visited
+    first, so the approximate answer is always contained."""
+    db, idx = built
+    for q in random_walks(12, 64, seed=31):
+        a_ids, a_d, _ = approximate_search(idx, q, 10)
+        e_ids, e_d, _ = extended_search(idx, q, 10, 1)
+        np.testing.assert_array_equal(a_ids, e_ids)
+        np.testing.assert_array_equal(a_d, e_d)
+
+
+def test_nbr1_degenerates_to_approximate_device(built):
+    db, idx = built
+    qs = random_walks(12, 64, seed=31)
+    ids, d, _ = extended_search_device_batch(idx, qs, 10, nbr=1)
+    for i, q in enumerate(qs):
+        a_ids, a_d, _ = approximate_search(idx, q, 10)
+        got = ids[i][ids[i] >= 0]
+        np.testing.assert_array_equal(got, a_ids)
+        np.testing.assert_array_equal(d[i][:len(a_d)], a_d)
+
+
+def test_leaves_visited_in_lower_bound_order(built):
+    """Regression: leaves inside each sibling are visited by MINDIST (the
+    old _leaves_under traversal order was arbitrary), so a fixed budget must
+    never do worse than the same budget spent on the approximate leaf plus
+    globally-worse leaves — check via monotone improvement over nbr."""
+    db, idx = built
+    qs = random_walks(10, 64, seed=55)
+    gt = [set(brute_force_knn(db, q, 10)[0].tolist()) for q in qs]
+    recalls = []
+    for nbr in (1, 4, 16):
+        ids, _, _ = extended_search_device_batch(idx, qs, 10, nbr=nbr)
+        recalls.append(np.mean([
+            len(gt[i] & set(ids[i][ids[i] >= 0].tolist())) for i in
+            range(len(qs))]))
+    assert recalls[0] <= recalls[1] + 1e-9
+    assert recalls[1] <= recalls[2] + 1e-9
+
+
+# -- host/device parity ------------------------------------------------------
+
+def test_extended_device_matches_host_fixed_nbr(built):
+    db, idx = built
+    qs = random_walks(10, 64, seed=91)
+    for nbr in (1, 2, 4, 8):
+        _assert_extended_parity(idx, qs, 10, nbr)
+
+
+def test_extended_device_matches_host_whole_tree_budget(built):
+    """nbr >= n_leaves: the whole tree is within budget (the host's
+    parent-is-None branch) — every leaf is visited in (LB, id) order."""
+    db, idx = built
+    qs = random_walks(4, 64, seed=7)
+    _assert_extended_parity(idx, qs, 10, idx.flat.n_leaves + 5)
+
+
+def test_extended_device_fuzzy_and_tombstones(built_fuzzy):
+    db, idx = built_fuzzy
+    assert idx.stats.n_duplicates > 0
+    qs = random_walks(8, 64, seed=13)
+    victims = [3, 17]
+    for v in victims:
+        idx.delete(v)
+    try:
+        for nbr in (1, 3, 6):
+            _assert_extended_parity(idx, qs, 10, nbr)
+        ids, _, _ = extended_search_device_batch(idx, qs, 10, nbr=4)
+        for row in ids:
+            got = row[row >= 0]
+            assert len(np.unique(got)) == len(got)       # dedup in the merge
+            assert not set(victims) & set(got.tolist())  # tombstones skipped
+    finally:
+        for v in victims:
+            idx.alive[v] = True
+
+
+def test_extended_bitwise_invariant_to_shard_count(built_fuzzy):
+    db, idx = built_fuzzy
+    qs = random_walks(6, 64, seed=23)
+    ids1, d1, _ = extended_search_device_batch(idx, qs, 8, nbr=4)
+    for S in (2, 4):
+        devS = idx.device_index(n_shards=S)
+        idsS, dS, _ = extended_search_device_batch(idx, qs, 8, nbr=4,
+                                                   dev=devS)
+        np.testing.assert_array_equal(ids1, idsS)
+        np.testing.assert_array_equal(d1, dS)
+
+
+# -- fallback unification ----------------------------------------------------
+
+def test_empty_region_descent_falls_back_like_approximate(built):
+    """Adversarial out-of-distribution queries hit empty routing regions;
+    the extended descent must take the same min-LB fallback child as
+    route_to_leaf (the old code dead-ended with a stale parent) on host and
+    device alike."""
+    db, idx = built
+    qs = 4.0 * random_walks(8, 64, seed=101) + 3.0
+    for q in qs:
+        a_ids, a_d, _ = approximate_search(idx, q, 5)
+        e_ids, e_d, _ = extended_search(idx, q, 5, 1)
+        np.testing.assert_array_equal(a_ids, e_ids)
+        np.testing.assert_array_equal(a_d, e_d)
+    for nbr in (1, 4):
+        _assert_extended_parity(idx, qs, 5, nbr)
+
+
+def test_empty_index_returns_empty_results_host_and_device():
+    """Empty index: both paths return empty/padded results instead of
+    crashing — unified with the batched paths' empty fallbacks."""
+    idx = DumpyIndex.build(np.zeros((0, 64), np.float32), PARAMS)
+    qs = random_walks(3, 64, seed=5)
+    ids_h, d_h, _ = extended_search(idx, qs[0], 5, 4)
+    assert len(ids_h) == 0 and len(d_h) == 0
+    ids, d, _ = extended_search_device_batch(idx, qs, 5, nbr=4)
+    assert (ids == -1).all() and np.isinf(d).all()
+    ids_e, d_e, _ = exact_search_device_batch(idx, qs, 5)
+    assert (ids_e == -1).all() and np.isinf(d_e).all()
+
+
+# -- monotonicity property ---------------------------------------------------
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=4, deadline=None)
+def test_kth_distance_monotone_in_nbr(seed):
+    """Property: the k-th extended-search distance is non-increasing in nbr
+    (the nbr visit set is a subset of the nbr+1 visit set, because the
+    target subtree is always fully visited first) — host and device, on a
+    fuzzy+tombstoned layout."""
+    db = random_walks(1500, 64, seed=3)
+    idx = DumpyIndex.build(db, FUZZY)
+    idx.delete(int(seed) % len(db))
+    qs = random_walks(3, 64, seed=60_000 + seed)
+    k = 8
+    for q in qs:
+        prev = np.inf
+        for nbr in (1, 2, 4, 8, 32):
+            _, d, _ = extended_search(idx, q, k, nbr)
+            kth = d[-1] if len(d) else np.inf
+            assert kth <= prev + 1e-9, (nbr, kth, prev)
+            prev = kth
+    prev = np.full(len(qs), np.inf)
+    for nbr in (1, 2, 4, 8, 32):
+        _, d, _ = extended_search_device_batch(idx, qs, k, nbr=nbr)
+        kth = np.where(np.isfinite(d).any(axis=1),
+                       np.nanmax(np.where(np.isfinite(d), d, np.nan), axis=1),
+                       np.inf)
+        assert (kth <= prev + 1e-9).all(), (nbr, kth, prev)
+        prev = kth
+
+
+# -- serving / distributed wrappers -----------------------------------------
+
+def test_search_distributed_nbr_knob(built):
+    from repro.core.distributed import search_distributed
+    db, idx = built
+    qs = random_walks(4, 64, seed=3)
+    ids_x, d_x = search_distributed(idx, qs, 5)              # exact
+    ids_n, d_n = search_distributed(idx, qs, 5, nbr=4)       # Alg. 4
+    for i, q in enumerate(qs):
+        gt_ids, gt_d = brute_force_knn(db, q, 5)
+        np.testing.assert_allclose(np.sort(d_x[i]), np.sort(gt_d), atol=1e-3)
+        h_ids, h_d, _ = extended_search(idx, q, 5, 4)
+        np.testing.assert_array_equal(ids_n[i][ids_n[i] >= 0], h_ids)
+
+
+def test_device_rerank_false_same_id_set(built):
+    """The serving variant (rerank=False, fully on device) returns the same
+    id set as the host path — only the (d, id) tie order may differ."""
+    db, idx = built
+    qs = random_walks(6, 64, seed=17)
+    ids, d, _ = extended_search_device_batch(idx, qs, 10, nbr=4,
+                                             rerank=False)
+    for i, q in enumerate(qs):
+        h_ids, _, _ = extended_search(idx, q, 10, 4)
+        assert set(ids[i][ids[i] >= 0].tolist()) == set(h_ids.tolist())
+        drow = d[i][np.isfinite(d[i])]
+        assert (np.diff(drow) >= 0).all()

@@ -3,9 +3,12 @@ of iSAX-family pruning (any violation silently breaks exact search)."""
 import numpy as np
 from _propcheck import given, settings, st, hnp
 
-from repro.core.lb import (dtw_batch_jnp, dtw_envelope_np, dtw_np, ed_np,
-                           envelope_paa_np, mindist_dtw_bounds_np,
-                           mindist_paa_bounds_np, node_bounds_np)
+from repro.core.lb import (dtw_batch_jnp, dtw_batch_queries_jnp,
+                           dtw_envelope_batch_jnp, dtw_envelope_np, dtw_np,
+                           dtw_topk_batch_jnp, ed_np, envelope_paa_np,
+                           lb_keogh_batch_jnp, lb_keogh_np,
+                           mindist_dtw_bounds_np, mindist_paa_bounds_np,
+                           node_bounds_np)
 from repro.core.sax import SaxParams, sax_encode_np
 
 PARAMS = SaxParams(w=8, b=8)
@@ -66,6 +69,49 @@ def test_dtw_batch_matches_reference(xs, q):
     got = np.asarray(dtw_batch_jnp(q, xs, band))
     want = np.array([dtw_np(q, x, band) for x in xs])
     np.testing.assert_allclose(got, want, atol=1e-3, rtol=1e-4)
+
+
+@given(series, st.integers(1, 8))
+@settings(max_examples=10, deadline=None)
+def test_dtw_query_batch_matches_reference(xs, band):
+    """ROADMAP batched DTW: the query-vmapped band DP must match the host
+    reference for every (query, candidate) pair."""
+    qs = xs[:3]
+    got = np.asarray(dtw_batch_queries_jnp(qs, xs, band))
+    want = np.array([[dtw_np(q, x, band) for x in xs] for q in qs])
+    np.testing.assert_allclose(got, want, atol=1e-3, rtol=1e-4)
+
+
+@given(series, query, st.integers(1, 8))
+@settings(max_examples=15, deadline=None)
+def test_batched_envelope_and_lb_keogh_match_host(xs, q, band):
+    U, L = dtw_envelope_batch_jnp(q[None, :], band)
+    Un, Ln = dtw_envelope_np(q, band)
+    np.testing.assert_allclose(np.asarray(U[0]), Un, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(L[0]), Ln, atol=1e-5)
+    got = np.asarray(lb_keogh_batch_jnp(xs, U, L))[0]
+    np.testing.assert_allclose(got, lb_keogh_np(xs, Un, Ln),
+                               atol=1e-3, rtol=1e-4)
+    # the pre-filter stays a lower bound of banded DTW
+    true = np.array([dtw_np(q, x, band) for x in xs])
+    assert (got <= true + 1e-3).all()
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=5, deadline=None)
+def test_dtw_topk_prefilter_is_exact(seed):
+    """The LB_Keogh-masked candidate scan returns the exact banded-DTW
+    top-k distances (masked-out candidates all have LB >= the seeded
+    cutoff, hence true distance >= every kept one)."""
+    rng = np.random.default_rng(seed)
+    qs = rng.standard_normal((3, N)).astype(np.float32)
+    xs = rng.standard_normal((30, N)).astype(np.float32)
+    band, k = 6, 5
+    d, ids = dtw_topk_batch_jnp(qs, xs, band, k)
+    d = np.asarray(d)
+    for i, q in enumerate(qs):
+        ref = np.sort([dtw_np(q, x, band) for x in xs])[:k]
+        np.testing.assert_allclose(np.sort(d[i]), ref, atol=1e-3, rtol=1e-4)
 
 
 def test_mindist_zero_when_inside():
