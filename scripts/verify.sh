@@ -2,7 +2,8 @@
 # Tier-1 verification: the full offline test suite (see tests/README.md),
 # followed by the seconds-scale batched-search benchmark smoke (--quick:
 # exercises the DeviceIndex serving paths end-to-end — exact, approximate,
-# and the extended (Alg. 4) nbr sweep with recall@k — no baseline update).
+# the extended (Alg. 4) nbr sweep with recall@k, and the DTW metric smoke
+# (batched exact DTW + fused masked band-DP top-k) — no baseline update).
 # Usage: scripts/verify.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."

@@ -14,7 +14,11 @@ search impossible to express.  ``DeviceIndex`` unifies it:
   row count ``Tp`` (pad rows: ``alive=False``, ``id=-1``, zero series);
 * per-shard leaf MINDIST envelopes and the fixed-size span schedule
   (windows + (leaf, window)-intersection edges) are precomputed so each
-  shard can run the windowed-pruning loop locally;
+  shard can run the windowed-pruning loop locally — the same envelope
+  tables serve both metrics (the interval MINDIST of ``core.metric``
+  compares them against the query PAA for ED and against the query's
+  LB_Keogh envelope summary for DTW, so no DTW-specific leaf state is
+  uploaded);
 * the global leaf table (``leaf_start/size`` in flattened ``S·Tp`` row
   coordinates, global lo/hi envelopes) and the flattened routing tables
   serve the batched approximate descent; the sibling routing tables

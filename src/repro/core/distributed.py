@@ -103,7 +103,8 @@ def build_distributed(db: np.ndarray, params: DumpyParams | None = None
 
 
 def search_distributed(index: DumpyIndex, queries: np.ndarray, k: int,
-                       nbr: int | None = None
+                       nbr: int | None = None, metric: str = "ed",
+                       band: int | None = None
                        ) -> tuple[np.ndarray, np.ndarray]:
     """Sharded kNN: a thin wrapper over the DeviceIndex search paths.
 
@@ -113,7 +114,10 @@ def search_distributed(index: DumpyIndex, queries: np.ndarray, k: int,
     the recall/latency knob: ``None`` runs the exact windowed-pruning
     search, an integer runs the extended approximate search (paper Alg. 4 —
     the target subtree plus up to ``nbr-1`` lower-bound-ordered sibling
-    leaves).  Both inherit tombstones and the in-merge fuzzy dedup."""
+    leaves).  ``metric``/``band`` select the distance (``"ed"`` or banded
+    ``"dtw"``, band defaulting to 10% of the length) — both paths run on
+    device for either metric.  Both inherit tombstones and the in-merge
+    fuzzy dedup."""
     from .search_device import (exact_search_device_batch,
                                 extended_search_device_batch)
     mesh = get_mesh()
@@ -121,33 +125,69 @@ def search_distributed(index: DumpyIndex, queries: np.ndarray, k: int,
         mesh = None
     if nbr is not None:
         ids, d, _ = extended_search_device_batch(index, queries, k,
-                                                 nbr=nbr, mesh=mesh)
+                                                 nbr=nbr, mesh=mesh,
+                                                 metric=metric, band=band)
     else:
-        ids, d, _ = exact_search_device_batch(index, queries, k, mesh=mesh)
+        ids, d, _ = exact_search_device_batch(index, queries, k, mesh=mesh,
+                                              metric=metric, band=band)
     return ids, d
+
+
+def _abstract_prep(q_batch: int, w: int, length: int):
+    """ShapeDtypeStruct pytree matching ``metric.query_prep_jnp`` output
+    (ED and DTW preps are shape-identical: segment interval + envelope)."""
+    seg = jax.ShapeDtypeStruct((q_batch, w), jnp.float32)
+    env = jax.ShapeDtypeStruct((q_batch, length), jnp.float32)
+    return (seg, seg, env, env)
 
 
 def lower_search_sharded(mesh, *, n_series: int = 1 << 22, length: int = 256,
                          w: int = 16, chunk: int = 8192,
                          n_leaves: int = 16384, k: int = 58,
-                         q_batch: int = 64):
+                         q_batch: int = 64, metric=None):
     """Lower the DeviceIndex sharded windowed search on ``mesh`` with
-    production shardings (shared by both dry-run entry points).  Returns the
-    jax ``Lowered`` object; callers ``.compile()`` and harvest analyses."""
+    production shardings (shared by both dry-run entry points).  ``metric``
+    (a ``core.metric.Metric``; default ED) selects the specialization —
+    ``Metric("dtw", band)`` lowers the fused masked band-DP program.
+    Returns the jax ``Lowered`` object; callers ``.compile()`` and harvest
+    analyses."""
     from .device_index import abstract_device_index
+    from .metric import ED
     from .search_device import _exact_knn_sharded, _mesh_shards
 
+    met = metric or ED
     dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
     dev_abs = abstract_device_index(n_series, length, w,
                                     n_shards=_mesh_shards(mesh),
                                     chunk=chunk, n_leaves=n_leaves)
-    # close over k: pjit rejects kwargs when in_shardings is given
-    search_k = lambda d, paa, q: _exact_knn_sharded(d, paa, q, k=k)
+    # close over k/metric: pjit rejects kwargs when in_shardings is given
+    search_k = lambda d, prep, q: _exact_knn_sharded(d, prep, q, k=k,
+                                                     metric=met)
     jitted = jax.jit(search_k,
                      in_shardings=(dev_abs.shardings(mesh, dp), None, None))
-    paa_abs = jax.ShapeDtypeStruct((q_batch, w), jnp.float32)
+    prep_abs = _abstract_prep(q_batch, w, length)
     q_abs = jax.ShapeDtypeStruct((q_batch, length), jnp.float32)
-    return jitted.lower(dev_abs, paa_abs, q_abs)
+    return jitted.lower(dev_abs, prep_abs, q_abs)
+
+
+def lower_search_dtw(mesh, *, n_series: int = 1 << 22, length: int = 256,
+                     w: int = 16, chunk: int | None = None,
+                     n_leaves: int = 16384, k: int = 58, q_batch: int = 64,
+                     band: int | None = None):
+    """Lower the sharded *DTW* exact search (envelope bounds + LB_Keogh
+    pre-filter + fused masked band DP) on ``mesh`` — the ``dumpy_search_dtw``
+    roofline cell.  The span chunk defaults to the DTW frontier-bounded
+    width (``search_device.DTW_CHUNK``), matching what
+    ``exact_search_device_batch(metric="dtw")`` serves with."""
+    from .metric import Metric, default_band
+    from .search_device import DTW_CHUNK
+
+    return lower_search_sharded(
+        mesh, n_series=n_series, length=length, w=w,
+        chunk=chunk if chunk is not None else DTW_CHUNK,
+        n_leaves=n_leaves, k=k, q_batch=q_batch,
+        metric=Metric("dtw",
+                      band if band is not None else default_band(length)))
 
 
 def lower_search_extended(mesh, *, n_series: int = 1 << 22, length: int = 256,
@@ -164,15 +204,15 @@ def lower_search_extended(mesh, *, n_series: int = 1 << 22, length: int = 256,
     dev_abs = abstract_device_index(n_series, length, w,
                                     n_shards=_mesh_shards(mesh),
                                     chunk=chunk, n_leaves=n_leaves)
-    search_n = lambda d, paa, sq, q: _extended_knn_sharded(
-        d, paa, sq, q, k=k, nbr=nbr, subtree=True)
+    search_n = lambda d, prep, sq, q: _extended_knn_sharded(
+        d, prep, sq, q, k=k, nbr=nbr, subtree=True, span_cap=n_leaves)
     jitted = jax.jit(search_n,
                      in_shardings=(dev_abs.shardings(mesh, dp),
                                    None, None, None))
-    paa_abs = jax.ShapeDtypeStruct((q_batch, w), jnp.float32)
+    prep_abs = _abstract_prep(q_batch, w, length)
     sax_abs = jax.ShapeDtypeStruct((q_batch, w), jnp.int32)
     q_abs = jax.ShapeDtypeStruct((q_batch, length), jnp.float32)
-    return jitted.lower(dev_abs, paa_abs, sax_abs, q_abs)
+    return jitted.lower(dev_abs, prep_abs, sax_abs, q_abs)
 
 
 def dryrun_cells(mesh) -> dict:
@@ -206,4 +246,8 @@ def dryrun_cells(mesh) -> dict:
         lo4 = lower_search_extended(mesh, n_series=n_series, length=length,
                                     w=w, chunk=4096, n_leaves=L)
         out["dumpy_search_extended"] = lo4.compile()
+
+        lo5 = lower_search_dtw(mesh, n_series=n_series, length=length,
+                               w=w, n_leaves=L)
+        out["dumpy_search_dtw"] = lo5.compile()
     return out

@@ -72,9 +72,22 @@ def node_bounds_np(sym: np.ndarray, card: np.ndarray, b: int,
 def mindist_jnp(paa_q: jax.Array, lo: jax.Array, hi: jax.Array, n: int) -> jax.Array:
     """Batched MINDIST: ``paa_q [Q, w]``, ``lo/hi [L, w]`` → ``[Q, L]``
     (squared, to avoid sqrt in the pruning loop)."""
-    w = paa_q.shape[-1]
-    below = jnp.maximum(lo[None, :, :] - paa_q[:, None, :], 0.0)
-    above = jnp.maximum(paa_q[:, None, :] - hi[None, :, :], 0.0)
+    return lb_interval_jnp(paa_q, paa_q, lo, hi, n)
+
+
+@functools.partial(jax.jit, static_argnums=(4,))
+def lb_interval_jnp(seg_lo: jax.Array, seg_hi: jax.Array, lo: jax.Array,
+                    hi: jax.Array, n: int) -> jax.Array:
+    """Interval MINDIST, batched + squared: query intervals
+    ``seg_lo/seg_hi [Q, w]`` vs regions ``lo/hi [L, w]`` → ``[Q, L]``.
+
+    The metric-generic region bound (see ``core.metric``): a degenerate
+    interval (``seg_lo == seg_hi == PAA(q)``) gives the ED MINDIST, the
+    LB_Keogh envelope summary gives the DTW bound — identical op order to
+    the old ED-only ``mindist_jnp``, so ED results are bitwise unchanged."""
+    w = seg_lo.shape[-1]
+    below = jnp.maximum(lo[None, :, :] - seg_hi[:, None, :], 0.0)
+    above = jnp.maximum(seg_lo[:, None, :] - hi[None, :, :], 0.0)
     d = jnp.maximum(below, above)
     return (n / w) * (d * d).sum(axis=-1)
 
@@ -216,14 +229,215 @@ def dtw_envelope_batch_jnp(qs: jax.Array, r: int) -> tuple[jax.Array, jax.Array]
 
 
 @jax.jit
+def lb_keogh2_batch_jnp(xs: jax.Array, U: jax.Array, L: jax.Array) -> jax.Array:
+    """Squared LB_Keogh of every candidate against every query envelope:
+    ``xs [..., m, n]``, ``U/L [Q, n]`` → ``[Q, m]`` (one ``[Q, m, n]``
+    temporary — callers chunk ``m`` at scale).  ``xs`` may also carry a
+    leading per-query axis ``[Q, m, n]`` (the leaf-gather layout).
+
+    The squared form is what the device pruning loops compare against their
+    running squared top-k cutoffs (same convention as ``lb_interval_jnp``)."""
+    xsb = xs if xs.ndim == 3 else xs[None, :, :]
+    above = jnp.maximum(xsb - U[:, None, :], 0.0)
+    below = jnp.maximum(L[:, None, :] - xsb, 0.0)
+    d = jnp.maximum(above, below)
+    return (d * d).sum(-1)
+
+
+@jax.jit
 def lb_keogh_batch_jnp(xs: jax.Array, U: jax.Array, L: jax.Array) -> jax.Array:
     """LB_Keogh of every candidate against every query envelope:
-    ``xs [m, n]``, ``U/L [Q, n]`` → ``[Q, m]`` (one ``[Q, m, n]`` temporary —
-    callers chunk ``m`` at scale)."""
-    above = jnp.maximum(xs[None, :, :] - U[:, None, :], 0.0)
-    below = jnp.maximum(L[:, None, :] - xs[None, :, :], 0.0)
-    d = jnp.maximum(above, below)
-    return jnp.sqrt((d * d).sum(-1))
+    ``xs [m, n]``, ``U/L [Q, n]`` → ``[Q, m]`` (sqrt of the squared core)."""
+    return jnp.sqrt(lb_keogh2_batch_jnp(xs, U, L))
+
+
+def _dtw2_masked_scan_full(q: jax.Array, xs: jax.Array, r: int,
+                           mask: jax.Array, cutoff2: jax.Array) -> jax.Array:
+    """Full-width anti-diagonal DP (frontier = all ``n`` columns) — the
+    fallback of :func:`_dtw2_masked_scan` when the band covers the whole
+    matrix (``r + 1 >= n``), where compaction buys nothing."""
+    n = q.shape[0]
+    m = xs.shape[0]
+    INF = jnp.float32(jnp.inf)
+    jidx = jnp.arange(n)
+    zpad = jnp.zeros(n, q.dtype)
+    qpad = jnp.concatenate([zpad, q, zpad])   # q[d - j] = qpad[n + d - j]
+
+    def cond(carry):
+        d, _, _, alive = carry
+        return (d < 2 * n - 1) & alive.any()
+
+    def body(carry):
+        d, dm2, dm1, alive = carry
+        i = d - jidx                                       # [n] row of col j
+        inband = (i >= 0) & (i < n) & (jnp.abs(i - jidx) <= r)
+        qd = jnp.flip(jax.lax.dynamic_slice(qpad, (d + 1,), (n,)))
+        c = (xs - qd[None, :]) ** 2                        # [m, n] cost(i, j)
+        left = jnp.concatenate([jnp.full((m, 1), INF), dm1[:, :-1]], axis=1)
+        diag = jnp.concatenate([jnp.full((m, 1), INF), dm2[:, :-1]], axis=1)
+        best = jnp.minimum(jnp.minimum(dm1, left), diag)
+        best = jnp.where((d == 0) & (jidx == 0)[None, :], 0.0, best)
+        out = jnp.where(inband[None, :], c + best, INF)
+        lane_min = jnp.minimum(out.min(axis=1), dm1.min(axis=1))
+        return d + 1, dm1, out, alive & (lane_min <= cutoff2)
+
+    init = (jnp.int32(0), jnp.full((m, n), INF), jnp.full((m, n), INF),
+            mask)
+    _, _, dm1, alive = jax.lax.while_loop(cond, body, init)
+    return jnp.where(alive, dm1[:, n - 1], INF)
+
+
+def _dtw2_masked_scan(q: jax.Array, xs: jax.Array, r: int, mask: jax.Array,
+                      cutoff2: jax.Array) -> jax.Array:
+    """Anti-diagonal banded DTW² of one query vs a candidate block with lane
+    masking and cutoff early-abandon: ``q [n]``, ``xs [m, n]``, ``mask [m]``,
+    ``cutoff2`` scalar → squared distances ``[m]`` (masked/abandoned lanes
+    come back ``+inf``).
+
+    The DP walks the 2n-1 anti-diagonals (cells on diagonal ``d`` depend
+    only on diagonals ``d-1``/``d-2``), so the sequential depth is O(n)
+    instead of the row-scan's O(n²), and the carried frontier is
+    *band-compacted* to the ``r+1`` in-band slots of each diagonal
+    (slot ``o`` of diagonal ``d`` is column ``j = base(d) + o`` with
+    ``base(d) = clip(⌈(d-r)/2⌉, 0, n-1-r)``) — each step is one vectorized
+    ``[m, r+1]`` update instead of ``[m, n]``, an ``n/(r+1)``-fold work cut
+    at the usual 10% band.  The ``while_loop`` exits as soon as every lane
+    is dead: a lane dies when its LB_Keogh mask is off, or when the min DP
+    value over its last two diagonals exceeds ``cutoff2`` (every warping
+    path crosses a cell of diagonal ``d`` or ``d-1``, and path values only
+    grow, so the final distance is bounded below by that min).  This is how
+    LB-masked candidates *skip* DP work rather than paying it under a
+    where-mask."""
+    n = q.shape[0]
+    if r + 1 >= n:
+        return _dtw2_masked_scan_full(q, xs, r, mask, cutoff2)
+    m = xs.shape[0]
+    Wb = r + 1
+    INF = jnp.float32(jnp.inf)
+    oidx = jnp.arange(Wb)
+    zpad = jnp.zeros(n, q.dtype)
+    qpad = jnp.concatenate([zpad, q, zpad])   # q[i] = qpad[n + i]
+
+    def base(d):
+        return jnp.clip((d - r + 1) // 2, 0, n - 1 - r)
+
+    def cond(carry):
+        d, _, _, alive = carry
+        return (d < 2 * n - 1) & alive.any()
+
+    def body(carry):
+        d, dm2, dm1, alive = carry
+        b = base(d)
+        s1 = b - base(d - 1)                    # slot shift vs diagonal d-1
+        s2 = b - base(d - 2)                    # slot shift vs diagonal d-2
+        j = b + oidx                                        # [Wb] columns
+        i = d - j                                           # [Wb] rows
+        valid = (i >= 0) & (i < n) & (j < n) & (jnp.abs(i - j) <= r)
+        xwin = jax.lax.dynamic_slice(xs, (0, b), (m, Wb))
+        qd = jnp.flip(jax.lax.dynamic_slice(
+            qpad, (n + d - b - Wb + 1,), (Wb,)))            # q[d - j]
+        c = (xwin - qd[None, :]) ** 2                       # [m, Wb]
+        pad1 = jnp.full((m, 1), INF)
+        up = jax.lax.dynamic_slice(                         # dm1[o + s1]
+            jnp.concatenate([dm1, pad1], 1), (0, s1), (m, Wb))
+        left = jax.lax.dynamic_slice(                       # dm1[o + s1 - 1]
+            jnp.concatenate([pad1, dm1, pad1], 1), (0, s1), (m, Wb))
+        diag = jax.lax.dynamic_slice(                       # dm2[o + s2 - 1]
+            jnp.concatenate([pad1, dm2, pad1, pad1], 1), (0, s2), (m, Wb))
+        best = jnp.minimum(jnp.minimum(up, left), diag)
+        best = jnp.where((d == 0) & (j == 0)[None, :], 0.0, best)
+        out = jnp.where(valid[None, :], c + best, INF)
+        lane_min = jnp.minimum(out.min(axis=1), dm1.min(axis=1))
+        return d + 1, dm1, out, alive & (lane_min <= cutoff2)
+
+    init = (jnp.int32(0), jnp.full((m, Wb), INF), jnp.full((m, Wb), INF),
+            mask)
+    _, _, dm1, alive = jax.lax.while_loop(cond, body, init)
+    # final cell (n-1, n-1) sits at slot (n-1) - base(2n-2) of diag 2n-2
+    slot = (n - 1) - int(np.clip((2 * n - 2 - r + 1) // 2, 0, n - 1 - r))
+    return jnp.where(alive, dm1[:, slot], INF)
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def dtw2_masked_batch_jnp(qs: jax.Array, xs: jax.Array, r: int,
+                          mask: jax.Array, cutoff2: jax.Array) -> jax.Array:
+    """Masked banded DTW² of a query batch vs a shared candidate block:
+    ``qs [Q, n]``, ``xs [m, n]``, ``mask [Q, m]``, ``cutoff2 [Q]`` →
+    ``[Q, m]`` squared distances (``+inf`` for masked/abandoned lanes).
+    The fused-DP core of the device DTW search paths (``ops.dtw_band``
+    routes here off-TPU)."""
+    return jax.vmap(
+        lambda q, mk, ct: _dtw2_masked_scan(q, xs, r, mk, ct)
+    )(qs, mask, cutoff2)
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def dtw2_masked_gather_jnp(qs: jax.Array, cand: jax.Array, r: int,
+                           mask: jax.Array, cutoff2: jax.Array) -> jax.Array:
+    """Masked banded DTW² with *per-query* candidate sets (the leaf-gather
+    layout of the approximate/extended scans): ``qs [Q, n]``,
+    ``cand [Q, m, n]``, ``mask [Q, m]``, ``cutoff2 [Q]`` → ``[Q, m]``."""
+    return jax.vmap(
+        lambda q, c, mk, ct: _dtw2_masked_scan(q, c, r, mk, ct)
+    )(qs, cand, mask, cutoff2)
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+def dtw_topk_masked_jnp(qs: jax.Array, xs: jax.Array, r: int, k: int,
+                        block: int = 256) -> tuple[jax.Array, jax.Array]:
+    """Exact banded-DTW top-k where LB_Keogh-masked candidates *skip* the
+    DP: ``qs [Q, n]``, ``xs [m, n]`` → ``(d [Q, kk], ids [Q, kk])``,
+    ``kk = min(k, m)`` — the fused replacement of the full-DP scan in
+    :func:`dtw_topk_batch_jnp` (same contract, same exactness).
+
+    Structure mirrors the ED span-schedule loop: candidates sort by their
+    min-over-queries LB_Keogh into fixed ``block`` slabs, a per-query
+    suffix-min over block LBs drives ``while_loop`` early termination, and
+    inside a block only candidates with ``LB² < τ²`` (τ = the running k-th
+    best, threaded through the scan) run the anti-diagonal DP — every true
+    top-k member has ``LB ≤ d < τ``, so the returned distances are exact."""
+    Q, n = qs.shape
+    m = xs.shape[0]
+    kk = min(k, m)
+    U, L = dtw_envelope_batch_jnp(qs, r)
+    lbk2 = lb_keogh2_batch_jnp(xs, U, L)                    # [Q, m]
+    order = jnp.argsort(lbk2.min(axis=0))
+    mp = -(-m // block) * block
+    pad = mp - m
+    xs_s = jnp.concatenate([xs[order], jnp.zeros((pad, n), xs.dtype)])
+    ids_s = jnp.concatenate(
+        [order.astype(jnp.int32), jnp.full(pad, -1, jnp.int32)])
+    lbk2_s = jnp.concatenate(
+        [lbk2[:, order], jnp.full((Q, pad), jnp.inf, jnp.float32)], axis=1)
+    W = mp // block
+    blk_lb = lbk2_s.reshape(Q, W, block).min(axis=2)        # [Q, W]
+    suffix = jnp.flip(jax.lax.cummin(jnp.flip(blk_lb, 1), axis=1), 1)
+    suffix = jnp.concatenate(
+        [suffix, jnp.full((Q, 1), jnp.inf, jnp.float32)], axis=1)
+
+    def cond(carry):
+        i, topd, _ = carry
+        return (i < W) & jnp.any(suffix[:, i] < topd[:, kk - 1])
+
+    def body(carry):
+        i, topd, topi = carry
+        slab = jax.lax.dynamic_slice(xs_s, (i * block, 0), (block, n))
+        sid = jax.lax.dynamic_slice(ids_s, (i * block,), (block,))
+        lb_blk = jax.lax.dynamic_slice(lbk2_s, (0, i * block), (Q, block))
+        cutoff = topd[:, kk - 1]
+        msk = (lb_blk < cutoff[:, None]) & (sid >= 0)[None, :]
+        d2 = dtw2_masked_batch_jnp(qs, slab, r, msk, cutoff)
+        idt = jnp.where(jnp.isinf(d2), -1,
+                        jnp.broadcast_to(sid[None, :], (Q, block)))
+        alld = jnp.concatenate([topd, d2], axis=1)
+        alli = jnp.concatenate([topi, idt], axis=1)
+        neg, sel = jax.lax.top_k(-alld, kk)
+        return i + 1, -neg, jnp.take_along_axis(alli, sel, axis=1)
+
+    init = (jnp.int32(0), jnp.full((Q, kk), jnp.inf, jnp.float32),
+            jnp.full((Q, kk), -1, jnp.int32))
+    _, topd, topi = jax.lax.while_loop(cond, body, init)
+    return jnp.sqrt(topd), topi
 
 
 @functools.partial(jax.jit, static_argnums=(2, 3))

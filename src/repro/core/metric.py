@@ -1,0 +1,126 @@
+"""Pluggable search metric (paper §7): ED and banded DTW as one abstraction.
+
+Every search path — host loops, the batched device paths, the sharded
+exact/extended programs — needs exactly three metric-specific ingredients:
+
+1. **query preprocessing** — a per-segment *interval* ``[seg_lo, seg_hi]``
+   used against node/leaf regions, plus a full-resolution *envelope*
+   ``[env_lo, env_hi]`` used against raw candidates.  For ED both degenerate
+   to the query itself (``seg_lo = seg_hi = PAA(q)``); for DTW they are the
+   LB_Keogh envelope over the Sakoe–Chiba band and its bound-preserving
+   per-segment summary (max of U, min of L);
+2. **region lower bound** — the interval MINDIST
+
+       d_j = max(0, lo_j - seg_hi_j, seg_lo_j - hi_j)
+       LB   = (n/w) * sum_j d_j^2                       (squared form)
+
+   which *is* ``mindist_paa_bounds`` when the interval is degenerate and
+   ``mindist_dtw_bounds`` when it is the envelope summary — one formula
+   replaces the ED special-casing everywhere a node/leaf/sibling is ranked;
+3. **candidate distance** — squared ED (MXU form) or the banded DTW DP,
+   where the DTW path first prunes candidates by LB_Keogh against the
+   running top-k cutoff and only survivors pay the anti-diagonal DP
+   (``lb.dtw2_masked_batch_jnp``).
+
+``Metric`` is a frozen (hashable) dataclass, so it is a legal jit
+static argument: the device search programs specialize per metric at trace
+time and the ED lowering is byte-identical to the pre-metric code.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .lb import (dtw_envelope_batch_jnp, dtw_envelope_np, envelope_paa_np)
+
+
+def default_band(n: int) -> int:
+    """The Sakoe–Chiba half-width used throughout the repo (paper §7:
+    10% of the series length)."""
+    return max(1, int(0.1 * n))
+
+
+@dataclasses.dataclass(frozen=True)
+class Metric:
+    """A search metric: ``name`` ∈ {"ed", "dtw"} and the DTW band (ignored
+    for ED).  Hashable → usable as a jit static argument."""
+    name: str = "ed"
+    band: int = 0
+
+    def __post_init__(self):
+        if self.name not in ("ed", "dtw"):
+            raise ValueError(f"unknown metric {self.name!r}")
+
+    @property
+    def is_dtw(self) -> bool:
+        return self.name == "dtw"
+
+
+ED = Metric("ed", 0)
+
+
+def resolve(metric, n: int, band: int | None = None) -> Metric:
+    """Normalize a user-facing ``metric`` (string or Metric) + optional
+    ``band`` override into a concrete :class:`Metric` for series length
+    ``n`` (DTW band defaults to the host searches' ``0.1 n``)."""
+    if isinstance(metric, Metric):
+        return metric
+    if metric == "ed":
+        return ED
+    return Metric("dtw", int(band) if band is not None else default_band(n))
+
+
+# ---------------------------------------------------------------------------
+# query preprocessing
+# ---------------------------------------------------------------------------
+
+def query_prep_np(metric: Metric, q: np.ndarray, paa_q: np.ndarray
+                  ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Host prep of one query → ``(seg_lo, seg_hi, env_lo, env_hi)``."""
+    if not metric.is_dtw:
+        return paa_q, paa_q, q, q
+    U, L = dtw_envelope_np(q, metric.band)
+    U_seg, L_seg = envelope_paa_np(U, L, paa_q.shape[-1])
+    return L_seg, U_seg, L, U
+
+
+def query_prep_jnp(metric: Metric, qs: jax.Array, paa_q: jax.Array
+                   ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Device prep of a query batch ``qs [Q, n]`` →
+    ``(seg_lo [Q,w], seg_hi [Q,w], env_lo [Q,n], env_hi [Q,n])``.
+
+    For ED the envelope slots carry ``qs`` itself (the ED distance never
+    reads them — XLA dead-code-eliminates the copies); for DTW the batched
+    LB_Keogh envelope and its segment max/min summary (the batched
+    :func:`~repro.core.lb.envelope_paa_np`)."""
+    if not metric.is_dtw:
+        return paa_q, paa_q, qs, qs
+    Q, n = qs.shape
+    w = paa_q.shape[-1]
+    U, L = dtw_envelope_batch_jnp(qs, metric.band)
+    U_seg = U.reshape(Q, w, n // w).max(axis=-1)
+    L_seg = L.reshape(Q, w, n // w).min(axis=-1)
+    return L_seg, U_seg, L, U
+
+
+# ---------------------------------------------------------------------------
+# interval MINDIST — the one region lower bound both metrics share
+# ---------------------------------------------------------------------------
+
+def interval_mindist_np(seg_lo: np.ndarray, seg_hi: np.ndarray,
+                        lo: np.ndarray, hi: np.ndarray, n: int) -> np.ndarray:
+    """Host interval MINDIST (sqrt form, the host heap's scale):
+    ``seg_lo/seg_hi [..., w]`` query interval vs ``lo/hi [..., w]`` regions.
+
+    With ``seg_lo == seg_hi == PAA(q)`` this is bitwise
+    ``mindist_paa_bounds_np``; with the envelope summary it is bitwise
+    ``mindist_dtw_bounds_np`` — the host searches route through here so ED
+    behavior is unchanged and DTW gets the same code path."""
+    w = seg_lo.shape[-1]
+    below = np.maximum(lo - seg_hi, 0.0)
+    above = np.maximum(seg_lo - hi, 0.0)
+    d = np.maximum(below, above)
+    return np.sqrt((n / w) * (d * d).sum(axis=-1))

@@ -15,9 +15,8 @@ import numpy as np
 
 from .build import TreeNode
 from .index import DumpyIndex
-from .lb import (dtw_envelope_np, dtw_np, ed_np, envelope_paa_np,
-                 lb_keogh_np, mindist_dtw_bounds_np, mindist_paa_bounds_np,
-                 node_bounds_np)
+from .lb import dtw_np, ed_np, lb_keogh_np, node_bounds_np
+from .metric import Metric, interval_mindist_np, query_prep_np, resolve
 from .sax import sax_encode_np
 
 
@@ -45,10 +44,10 @@ def _leaf_candidates(index: DumpyIndex, leaf_id: int) -> tuple[np.ndarray, np.nd
     return ids, index.db_ordered[lo:hi]
 
 
-def _dists(q: np.ndarray, xs: np.ndarray, metric: str, band: int) -> np.ndarray:
-    if metric == "ed":
+def _dists(q: np.ndarray, xs: np.ndarray, metric: Metric) -> np.ndarray:
+    if not metric.is_dtw:
         return ed_np(q, xs)
-    return np.array([dtw_np(q, x, band) for x in xs])
+    return np.array([dtw_np(q, x, metric.band) for x in xs])
 
 
 def _merge_topk(heap: list, ids: np.ndarray, dists: np.ndarray, alive: np.ndarray,
@@ -73,41 +72,48 @@ def _heap_result(heap: list) -> tuple[np.ndarray, np.ndarray]:
             np.array([d for d, _ in pairs], np.float32))
 
 
-def _node_lb(node: TreeNode, paa_q: np.ndarray, n: int, b: int) -> float:
+def _node_lb(node: TreeNode, qseg: tuple, n: int, b: int) -> float:
+    """Metric-generic node lower bound: ``qseg = (seg_lo, seg_hi)`` is the
+    query's per-segment interval (degenerate = ED MINDIST, envelope summary
+    = DTW bound — see ``core.metric``)."""
     lo, hi = node_bounds_np(node.sym[None, :], node.card[None, :], b)
-    return float(mindist_paa_bounds_np(paa_q, lo, hi, n)[0])
+    return float(interval_mindist_np(qseg[0], qseg[1], lo, hi, n)[0])
 
 
 # ---------------------------------------------------------------------------
 # approximate search — one target leaf (paper §5.5)
 # ---------------------------------------------------------------------------
 
-def route_to_leaf(index: DumpyIndex, paa_q: np.ndarray,
-                  sax_q: np.ndarray) -> TreeNode:
+def route_to_leaf(index: DumpyIndex, paa_q: np.ndarray, sax_q: np.ndarray,
+                  qseg: tuple | None = None) -> TreeNode:
     """Root→leaf descent of one query (paper §5.5).  Empty regions fall back
-    to the most promising existing child by node MINDIST.  This is the host
-    reference for the vectorized descent in ``search_device``."""
+    to the most promising existing child by the metric's node bound
+    (``qseg`` interval; ED when omitted).  This is the host reference for
+    the vectorized descent in ``search_device``."""
     b, n = index.params.sax.b, index.n
+    if qseg is None:
+        qseg = (paa_q, paa_q)
     node = index.root
     while not node.is_leaf:
         sid = node.route_sid(sax_q, b)
         child = node.routing.get(sid) or node.children.get(sid)
         if child is None:   # empty region → most promising existing child
             child = min(node.children.values(),
-                        key=lambda c: _node_lb(c, paa_q, n, b))
+                        key=lambda c: _node_lb(c, qseg, n, b))
         node = child
     return node
 
 
 def approximate_search(index: DumpyIndex, q: np.ndarray, k: int,
-                       metric: str = "ed") -> tuple[np.ndarray, np.ndarray, SearchStats]:
+                       metric: str = "ed", band: int | None = None
+                       ) -> tuple[np.ndarray, np.ndarray, SearchStats]:
     paa_q, sax_q = _encode_query(index, q)
-    n = index.n
-    band = max(1, int(0.1 * n))
-    node = route_to_leaf(index, paa_q, sax_q)
+    met = resolve(metric, index.n, band)
+    seg_lo, seg_hi, _, _ = query_prep_np(met, q, paa_q)
+    node = route_to_leaf(index, paa_q, sax_q, qseg=(seg_lo, seg_hi))
     ids, xs = _leaf_candidates(index, node.leaf_id)
     heap: list = []
-    _merge_topk(heap, ids, _dists(q, xs, metric, band), index.alive, k)
+    _merge_topk(heap, ids, _dists(q, xs, met), index.alive, k)
     stats = SearchStats(leaves_visited=1, series_scanned=len(ids),
                         pruning_ratio=1.0 - 1.0 / max(index.flat.n_leaves, 1))
     rid, rd = _heap_result(heap)
@@ -119,7 +125,8 @@ def approximate_search(index: DumpyIndex, q: np.ndarray, k: int,
 # ---------------------------------------------------------------------------
 
 def extended_search(index: DumpyIndex, q: np.ndarray, k: int, nbr: int,
-                    metric: str = "ed") -> tuple[np.ndarray, np.ndarray, SearchStats]:
+                    metric: str = "ed", band: int | None = None
+                    ) -> tuple[np.ndarray, np.ndarray, SearchStats]:
     """Extended approximate search (paper Alg. 4): widen the approximate
     answer to lower-bound-ordered *sibling subtrees* of the target.
 
@@ -138,10 +145,16 @@ def extended_search(index: DumpyIndex, q: np.ndarray, k: int, nbr: int,
        inside every subtree leaves are visited by (MINDIST, leaf id) — the
        node ordering Alg. 4 prescribes (leaves used to be visited in
        arbitrary traversal order) — until ``nbr`` leaves have been read.
+
+    All node bounds use the metric's interval MINDIST (ED: degenerate PAA
+    interval; DTW: LB_Keogh envelope summary), so the visit schedule is
+    metric-consistent with the exact search's leaf ordering.
     """
     paa_q, sax_q = _encode_query(index, q)
     b, n = index.params.sax.b, index.n
-    band = max(1, int(0.1 * n))
+    met = resolve(metric, n, band)
+    seg_lo, seg_hi, _, _ = query_prep_np(met, q, paa_q)
+    qseg = (seg_lo, seg_hi)
     nbr = max(int(nbr), 1)
 
     parent, node = None, index.root
@@ -150,7 +163,7 @@ def extended_search(index: DumpyIndex, q: np.ndarray, k: int, nbr: int,
         child = node.routing.get(sid) or node.children.get(sid)
         if child is None:   # empty region → most promising existing child
             child = min(node.children.values(),
-                        key=lambda c: _node_lb(c, paa_q, n, b))
+                        key=lambda c: _node_lb(c, qseg, n, b))
         parent, node = node, child
 
     ordered: list[TreeNode]
@@ -163,7 +176,7 @@ def extended_search(index: DumpyIndex, q: np.ndarray, k: int, nbr: int,
             if id(c) not in seen:
                 seen.add(id(c))
                 siblings.append(c)
-        siblings.sort(key=lambda c: (_node_lb(c, paa_q, n, b),
+        siblings.sort(key=lambda c: (_node_lb(c, qseg, n, b),
                                      _subtree_begin(c)))
         ordered = [node] + siblings
 
@@ -173,13 +186,13 @@ def extended_search(index: DumpyIndex, q: np.ndarray, k: int, nbr: int,
         if stats.leaves_visited >= nbr:
             break
         leaves = sorted(_leaves_under(sub),
-                        key=lambda lf: (_node_lb(lf, paa_q, n, b),
+                        key=lambda lf: (_node_lb(lf, qseg, n, b),
                                         lf.leaf_id))
         for leaf in leaves:
             if stats.leaves_visited >= nbr:
                 break
             ids, xs = _leaf_candidates(index, leaf.leaf_id)
-            _merge_topk(heap, ids, _dists(q, xs, metric, band), index.alive, k)
+            _merge_topk(heap, ids, _dists(q, xs, met), index.alive, k)
             stats.leaves_visited += 1
             stats.series_scanned += len(ids)
     stats.pruning_ratio = 1.0 - stats.leaves_visited / max(index.flat.n_leaves, 1)
@@ -216,25 +229,21 @@ def _subtree_begin(node: TreeNode) -> int:
 # ---------------------------------------------------------------------------
 
 def exact_search(index: DumpyIndex, q: np.ndarray, k: int,
-                 metric: str = "ed") -> tuple[np.ndarray, np.ndarray, SearchStats]:
-    n, b = index.n, index.params.sax.b
-    band = max(1, int(0.1 * n))
+                 metric: str = "ed", band: int | None = None
+                 ) -> tuple[np.ndarray, np.ndarray, SearchStats]:
+    n = index.n
+    met = resolve(metric, n, band)
     paa_q, _ = _encode_query(index, q)
+    seg_lo, seg_hi, env_lo, env_hi = query_prep_np(met, q, paa_q)
 
     # 1) seed best-so-far from the approximate answer
-    ids0, d0, _ = approximate_search(index, q, k, metric)
+    ids0, d0, _ = approximate_search(index, q, k, met)
     heap: list = []
     _merge_topk(heap, ids0, d0, index.alive, k)
 
-    # 2) lower bounds to every leaf pack
-    if metric == "ed":
-        lbs = mindist_paa_bounds_np(paa_q, index.flat.leaf_lo,
-                                    index.flat.leaf_hi, n)
-    else:
-        U, L = dtw_envelope_np(q, band)
-        U_seg, L_seg = envelope_paa_np(U, L, index.w)
-        lbs = mindist_dtw_bounds_np(U_seg, L_seg, index.flat.leaf_lo,
-                                    index.flat.leaf_hi, n)
+    # 2) lower bounds to every leaf pack — the metric's interval MINDIST
+    lbs = interval_mindist_np(seg_lo, seg_hi, index.flat.leaf_lo,
+                              index.flat.leaf_hi, n)
 
     order = np.argsort(lbs, kind="stable")
     stats = SearchStats(leaves_visited=1)
@@ -243,17 +252,17 @@ def exact_search(index: DumpyIndex, q: np.ndarray, k: int,
         if lbs[leaf_id] >= kth:
             break                       # sorted ⇒ everything further prunes
         ids, xs = _leaf_candidates(index, int(leaf_id))
-        if metric == "dtw":
+        if met.is_dtw:
             # candidate-level LB_Keogh pre-filter (Pallas `lb_keogh` on TPU):
             # only survivors pay the O(n·band) exact DTW
-            lbk = lb_keogh_np(xs, U, L)
+            lbk = lb_keogh_np(xs, env_hi, env_lo)
             sel = lbk < kth
             d = np.full(len(ids), np.inf)
             if sel.any():
-                d[sel] = _dists(q, xs[sel], metric, band)
+                d[sel] = _dists(q, xs[sel], met)
             stats.series_scanned += int(sel.sum())
         else:
-            d = _dists(q, xs, metric, band)
+            d = _dists(q, xs, met)
             stats.series_scanned += len(ids)
         _merge_topk(heap, ids, d, index.alive, k)
         stats.leaves_visited += 1

@@ -45,6 +45,15 @@ schedule from the sibling routing tables (target subtree first, remaining
 siblings by lower bound, leaves by lower bound within each), and scans the
 schedule shard-locally before the same all-gather dedup merge — see
 ``extended_search_device_batch``.
+
+Every path is *metric-pluggable* (``core.metric``): the query preprocessing
+produces a per-segment interval (ED: the PAA itself; DTW: the LB_Keogh
+envelope summary) feeding one interval-MINDIST bound everywhere a region is
+ranked, and the candidate distance is either the MXU ED form or the fused
+masked banded-DTW DP (``ops.dtw_band``) where LB_Keogh-pruned candidates
+skip the DP and the running top-k cutoff is threaded through the scan.  The
+``Metric`` struct is a jit static argument, so the ED programs lower exactly
+as before and DTW specializes separately.
 """
 from __future__ import annotations
 
@@ -56,9 +65,15 @@ import jax.numpy as jnp
 
 from .device_index import DeviceIndex
 from .index import DumpyIndex
-from .lb import ed2_batch_jnp
+from .lb import dtw_np, ed2_batch_jnp, lb_keogh2_batch_jnp
+from .metric import ED, Metric, query_prep_jnp, resolve
 from .sax import sax_encode_jnp
 from repro.kernels import ops
+
+# DTW span width: the anti-diagonal DP carries two [Q, chunk, n] frontiers,
+# so the exact-path spans stay small (256·64·256·4B·2 ≈ 32 MB at B=64) —
+# the ED chunk would be ~0.5 GB of DP state per span
+DTW_CHUNK = 256
 
 
 # ---------------------------------------------------------------------------
@@ -69,6 +84,49 @@ def _encode_batch(qs: jax.Array, w: int, b: int) -> tuple[jax.Array, jax.Array]:
     if jax.default_backend() == "tpu":
         return ops.sax_encode(qs, w, b)
     return sax_encode_jnp(qs, w, b)
+
+
+def _prep_batch(metric: Metric, qs_dev: jax.Array, w: int, b: int
+                ) -> tuple[tuple, jax.Array]:
+    """Encode + metric-preprocess a query batch → ``(prep, sax_q)`` with
+    ``prep = (seg_lo, seg_hi, env_lo, env_hi)`` (see ``core.metric``)."""
+    paa_q, sax_q = _encode_batch(qs_dev, w, b)
+    return query_prep_jnp(metric, qs_dev, paa_q), sax_q.astype(jnp.int32)
+
+
+def _dist2_slab(metric: Metric, qs: jax.Array, prep: tuple, slab: jax.Array,
+                valid: jax.Array, cutoff2: jax.Array) -> jax.Array:
+    """Squared candidate distances of the whole query batch against a shared
+    candidate slab, with invalid/pruned entries as ``+inf``.
+
+    ``valid [Q, m]`` marks live candidates; ``cutoff2 [Q]`` is the running
+    squared k-th best.  ED pays the MXU form for every candidate (the span
+    loop already pruned at span granularity); DTW first prunes candidates
+    whose squared LB_Keogh reaches the cutoff, then runs the fused masked
+    band DP — pruned candidates skip the DP entirely."""
+    if not metric.is_dtw:
+        d2 = ed2_batch_jnp(qs, slab)
+        return jnp.where(valid, d2, jnp.inf)
+    _, _, env_lo, env_hi = prep
+    lbk2 = lb_keogh2_batch_jnp(slab, env_hi, env_lo)          # [Q, m]
+    mask = valid & (lbk2 < cutoff2[:, None])
+    return ops.dtw_band(qs, slab, mask, cutoff2, metric.band)
+
+
+def _dist2_gather(metric: Metric, qs: jax.Array, prep: tuple,
+                  cand: jax.Array, valid: jax.Array, cutoff2: jax.Array
+                  ) -> jax.Array:
+    """As :func:`_dist2_slab` but with *per-query* candidate sets
+    ``cand [Q, m, n]`` (the leaf-gather layout of the approximate/extended
+    scans)."""
+    if not metric.is_dtw:
+        d2 = ((cand - qs[:, None, :]) ** 2).sum(-1)
+        return jnp.where(valid, d2, jnp.inf)
+    from .lb import dtw2_masked_gather_jnp
+    _, _, env_lo, env_hi = prep
+    lbk2 = lb_keogh2_batch_jnp(cand, env_hi, env_lo)
+    mask = valid & (lbk2 < cutoff2[:, None])
+    return dtw2_masked_gather_jnp(qs, cand, metric.band, mask, cutoff2)
 
 
 def _result_margin(dev: DeviceIndex, k: int) -> int:
@@ -108,25 +166,30 @@ def _dedup_topk(d2: jax.Array, ids: jax.Array, k: int
 # sharded exact search (one XLA program; S=1 is the single-device case)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("k",))
-def _exact_knn_sharded(dev: DeviceIndex, paa_q: jax.Array, qs: jax.Array, *,
-                       k: int) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """MINDIST tables → per-shard span loops (vmapped) → all-gather merge
-    with in-merge dedup.  Returns ``(d [Q,k], original ids [Q,k],
-    spans_visited [Q])`` with invalid slots as ``inf / -1``.
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
+def _exact_knn_sharded(dev: DeviceIndex, prep: tuple, qs: jax.Array, *,
+                       k: int, metric: Metric = ED
+                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Interval-MINDIST tables → per-shard span loops (vmapped) →
+    all-gather merge with in-merge dedup.  Returns ``(d [Q,k], original ids
+    [Q,k], spans_visited [Q])`` with invalid slots as ``inf / -1``.
 
     Early termination is per query *and* per shard: along the shard's span
     order, query q may stop merging at step i iff its suffix-min LB there is
     ≥ its running kth best — every span it has not seen locally is
-    individually prunable."""
+    individually prunable.  The loop is metric-generic: the leaf/span bound
+    is the metric's interval MINDIST and the slab distance is
+    :func:`_dist2_slab` (for DTW the running cutoff threads into the fused
+    masked band DP, so LB_Keogh-pruned candidates skip the DP)."""
     Q = qs.shape[0]
     chunk = dev.chunk
     n = dev.n
+    seg_lo, seg_hi = prep[0], prep[1]
 
     def per_shard(db_s, alive_s, ids_s, lo_s, hi_s,
                   w_start, w_lead, w_size, e_leaf, e_win):
         W = w_start.shape[0]
-        lbq = ops.lb_isax(paa_q, lo_s, hi_s, n)             # [Q, Lp] squared
+        lbq = ops.lb_paa_interval(seg_lo, seg_hi, lo_s, hi_s, n)  # [Q, Lp] sq
         # span LB = min over intersecting leaves (exact: it lower-bounds
         # every series the span contains; pad edges hit the +inf pad leaf)
         win_lb = jax.ops.segment_min(lbq[:, e_leaf].T, e_win, num_segments=W,
@@ -146,12 +209,12 @@ def _exact_knn_sharded(dev: DeviceIndex, paa_q: jax.Array, qs: jax.Array, *,
             i, topd, topi, vis = carry
             start = w_start[i]
             slab = jax.lax.dynamic_slice(db_s, (start, 0), (chunk, n))
-            d2 = ed2_batch_jnp(qs, slab)                    # [Q, chunk] MXU
             j = jnp.arange(chunk)
             valid = (j >= w_lead[i]) & (j < w_lead[i] + w_size[i])
             valid &= jax.lax.dynamic_slice(alive_s, (start,), (chunk,))
             qact = win_lb[:, i] < topd[:, k - 1]            # [Q] active mask
-            d2 = jnp.where(valid[None, :] & qact[:, None], d2, jnp.inf)
+            d2 = _dist2_slab(metric, qs, prep, slab,
+                             valid[None, :] & qact[:, None], topd[:, k - 1])
             sid = jax.lax.dynamic_slice(ids_s, (start,), (chunk,))
             idt = jnp.where(jnp.isinf(d2), -1,
                             jnp.broadcast_to(sid[None, :], (Q, chunk)))
@@ -177,19 +240,29 @@ def _exact_knn_sharded(dev: DeviceIndex, paa_q: jax.Array, qs: jax.Array, *,
 
 
 def _finalize_exact(index: DumpyIndex, qs: np.ndarray, ids_dev: np.ndarray,
-                    k: int) -> tuple[np.ndarray, np.ndarray]:
+                    k: int, metric: Metric = ED
+                    ) -> tuple[np.ndarray, np.ndarray]:
     """k-sized host re-rank for bitwise parity with ``search.exact_search``:
-    recompute candidate distances with the host direct-difference math and
-    sort by (d, id) — exactly the host heap's order.  Device invalid slots
-    (``id -1``) stay padded as ``-1 / inf``."""
+    recompute candidate distances with the host math (direct-difference ED,
+    or the float64 ``dtw_np`` DP the host heap compares) and sort by (d, id)
+    — exactly the host heap's order.  Device invalid slots (``id -1``) stay
+    padded as ``-1 / inf``; an empty collection returns all-padding for any
+    metric."""
     Q, kk = ids_dev.shape
     if index.db.shape[0] == 0:                              # empty collection
         return (np.full((Q, k), -1, np.int64),
                 np.full((Q, k), np.inf, np.float32))
     cand = index.db[np.maximum(ids_dev, 0)]                 # [Q, kk, n]
-    diff = cand - qs[:, None, :]
-    d = np.sqrt((diff * diff).sum(axis=-1)).astype(np.float32)
-    d = np.where(ids_dev < 0, np.inf, d)
+    if metric.is_dtw:
+        d = np.full((Q, kk), np.inf)                        # f64: heap order
+        for qi in range(Q):
+            for j in range(kk):
+                if ids_dev[qi, j] >= 0:
+                    d[qi, j] = dtw_np(qs[qi], cand[qi, j], metric.band)
+    else:
+        diff = cand - qs[:, None, :]
+        d = np.sqrt((diff * diff).sum(axis=-1)).astype(np.float32)
+        d = np.where(ids_dev < 0, np.inf, d)
     out_ids = np.full((Q, k), -1, np.int64)
     out_d = np.full((Q, k), np.inf, np.float32)
     for qi in range(Q):
@@ -210,39 +283,50 @@ def _mesh_shards(mesh) -> int:
 
 def exact_search_device_batch(index: DumpyIndex, qs: np.ndarray, k: int,
                               chunk: int = 2048, mesh=None,
-                              dev: DeviceIndex | None = None
+                              dev: DeviceIndex | None = None,
+                              metric: str | Metric = "ed",
+                              band: int | None = None
                               ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Batched exact kNN: ``qs [Q, n]`` → ``(ids [Q, k], d [Q, k],
-    spans_visited [Q])``.  Results match ``search.exact_search`` per query
-    (fuzzy duplicates deduplicated on device, tombstones skipped); short
-    results pad with ``id -1 / d inf``.
+    spans_visited [Q])``.  Results match ``search.exact_search`` at the same
+    ``metric``/``band`` per query (fuzzy duplicates deduplicated on device,
+    tombstones skipped, ``k > n_alive`` truncates); short results pad with
+    ``id -1 / d inf``.
 
     With ``mesh`` (or a pre-sharded ``dev``), the span loop runs shard-local
     over the data axis and the per-shard top-k merges through an all-gather —
-    bitwise-identical to the single-device result."""
+    bitwise-identical to the single-device result.  ``metric="dtw"`` runs
+    the same program with the envelope bounds and the fused masked band DP
+    (narrower ``DTW_CHUNK`` spans bound the DP frontier memory)."""
     qs = np.ascontiguousarray(np.atleast_2d(qs), np.float32)
+    met = resolve(metric, qs.shape[1], band)
+    if met.is_dtw:
+        chunk = min(chunk, DTW_CHUNK)
     if dev is None:
         dev = index.device_index(chunk=chunk, n_shards=_mesh_shards(mesh),
                                  mesh=mesh)
     sax = index.params.sax
     qs_dev = jnp.asarray(qs)
-    paa_q, _ = _encode_batch(qs_dev, sax.w, sax.b)
-    # +8 slack: the loop ranks by the MXU |q|²+|x|²-2qx form, whose f32
-    # cancellation can swap near-ties across the k boundary; the host
-    # re-rank (direct-difference math) then picks the true top-k from the
-    # widened set
+    prep, _ = _prep_batch(met, qs_dev, sax.w, sax.b)
+    # +8 slack: the loop ranks by f32 device math (the MXU |q|²+|x|²-2qx
+    # form for ED, the f32 band DP for DTW) whose rounding can swap
+    # near-ties across the k boundary; the host re-rank then picks the true
+    # top-k from the widened set
     kk = _result_margin(dev, k) + 8
-    d, ids, visited = _exact_knn_sharded(dev, paa_q, qs_dev, k=kk)
-    ids_out, d_out = _finalize_exact(index, qs, np.asarray(ids), k)
+    d, ids, visited = _exact_knn_sharded(dev, prep, qs_dev, k=kk, metric=met)
+    ids_out, d_out = _finalize_exact(index, qs, np.asarray(ids), k, met)
     return ids_out, d_out, np.asarray(visited)
 
 
 def exact_search_device(index: DumpyIndex, q: np.ndarray, k: int,
-                        chunk: int = 2048) -> tuple[np.ndarray, np.ndarray, int]:
+                        chunk: int = 2048, metric: str | Metric = "ed",
+                        band: int | None = None
+                        ) -> tuple[np.ndarray, np.ndarray, int]:
     """Single-query exact kNN: a batch of one through the shared device
     path.  Returns (original ids, distances, spans visited)."""
     ids, d, visited = exact_search_device_batch(index, q.reshape(1, -1), k,
-                                                chunk=chunk)
+                                                chunk=chunk, metric=metric,
+                                                band=band)
     valid = ids[0] >= 0
     return ids[0][valid], d[0][valid], int(visited[0])
 
@@ -308,19 +392,21 @@ def _descend_device(sax_q: jax.Array, node_csl: jax.Array,
     return leaf
 
 
-@functools.partial(jax.jit, static_argnames=("k", "kk", "nbr"))
-def _leaf_topk_device(dev: DeviceIndex, qs: jax.Array, lbq: jax.Array,
-                      routed: jax.Array, *, k: int, kk: int, nbr: int
+@functools.partial(jax.jit, static_argnames=("k", "kk", "nbr", "metric"))
+def _leaf_topk_device(dev: DeviceIndex, qs: jax.Array, prep: tuple,
+                      lbq: jax.Array, routed: jax.Array, *, k: int, kk: int,
+                      nbr: int, metric: Metric = ED
                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Scan the routed leaf (plus the ``nbr-1`` next-best leaves by MINDIST)
-    of every query over the flattened ``[S·Tp, n]`` shard layout and return
-    the deduped top-k: ``(ids [Q,k], d2 [Q,k], leaves [Q,nbr])``.  Invalid
-    slots come back as ``id -1 / d2 inf``.
+    """Scan the routed leaf (plus the ``nbr-1`` next-best leaves by the
+    metric's leaf bound) of every query over the flattened ``[S·Tp, n]``
+    shard layout and return the deduped top-k: ``(ids [Q,k], d2 [Q,k],
+    leaves [Q,nbr])``.  Invalid slots come back as ``id -1 / d2 inf``.
 
     Leaves are scanned one rank at a time with a fused running top-k merge,
     so the peak temporary is ``[Q, lmax, n]`` — a monolithic
     ``[Q, nbr, lmax, n]`` gather would be hundreds of MB per decode step at
-    serving defaults."""
+    serving defaults.  The running k-th best feeds the DTW cutoff, so later
+    ranks prune against what earlier ranks already found."""
     Q = qs.shape[0]
     lmax = dev.lmax
     db_flat = dev.db.reshape(-1, dev.n)
@@ -338,11 +424,10 @@ def _leaf_topk_device(dev: DeviceIndex, qs: jax.Array, lbq: jax.Array,
         rows = starts[:, None] + jnp.arange(lmax)[None, :]
         rows_c = jnp.clip(rows, 0, T - 1)                    # [Q, lmax]
         cand = db_flat[rows_c]                               # [Q, lmax, n]
-        d2 = ((cand - qs[:, None, :]) ** 2).sum(-1)          # [Q, lmax]
         valid = (jnp.arange(lmax)[None, :] < sizes[:, None]) \
             & alive_flat[rows_c]
-        d2 = jnp.where(valid, d2, jnp.inf)
-        idt = jnp.where(valid, ids_flat[rows_c], -1)
+        d2 = _dist2_gather(metric, qs, prep, cand, valid, topd[:, kk - 1])
+        idt = jnp.where(jnp.isinf(d2), -1, ids_flat[rows_c])
         return ops.topk_merge(topd, topi, d2, idt)
 
     init = (jnp.full((Q, kk), jnp.inf, jnp.float32),
@@ -354,31 +439,35 @@ def _leaf_topk_device(dev: DeviceIndex, qs: jax.Array, lbq: jax.Array,
 
 def approximate_search_device_batch(index: DumpyIndex, qs: np.ndarray, k: int,
                                     nbr: int = 1,
-                                    dev: DeviceIndex | None = None
+                                    dev: DeviceIndex | None = None,
+                                    metric: str | Metric = "ed",
+                                    band: int | None = None
                                     ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Batched approximate kNN (paper §5.5 descent, vectorized over queries).
 
     ``nbr=1`` visits exactly the leaf the host ``approximate_search`` picks
-    (leaf-selection parity is tested).  ``nbr>1`` widens to the next-best
-    leaves by MINDIST — the serving recall knob; unlike host
-    ``extended_search`` the extras are chosen globally, not within the target
-    subtree.  Returns ``(ids [Q, k'], d [Q, k'], leaves [Q, nbr])`` with
-    ``k' = min(k, nbr·max_leaf_size)``; empty slots are ``id -1 / d inf``.
-    Fuzzy replicas sharing a leaf are deduped in the device merge — the
-    whole path stays on device."""
+    at the same metric (leaf-selection parity is tested).  ``nbr>1`` widens
+    to the next-best leaves by the metric's leaf bound — the serving recall
+    knob; unlike host ``extended_search`` the extras are chosen globally,
+    not within the target subtree.  Returns ``(ids [Q, k'], d [Q, k'],
+    leaves [Q, nbr])`` with ``k' = min(k, nbr·max_leaf_size)``; empty slots
+    are ``id -1 / d inf``.  Fuzzy replicas sharing a leaf are deduped in
+    the device merge — the whole path stays on device."""
     qs = np.ascontiguousarray(np.atleast_2d(qs), np.float32)
+    met = resolve(metric, qs.shape[1], band)
     if dev is None:
         dev = index.device_index()
     sax_p = index.params.sax
     qs_dev = jnp.asarray(qs)
-    paa_q, sax_q = _encode_batch(qs_dev, sax_p.w, sax_p.b)
-    sax_q = sax_q.astype(jnp.int32)
+    prep, sax_q = _prep_batch(met, qs_dev, sax_p.w, sax_p.b)
 
-    lbq = ops.lb_isax(paa_q, dev.leaf_lo_g, dev.leaf_hi_g, dev.n)
+    lbq = ops.lb_paa_interval(prep[0], prep[1], dev.leaf_lo_g, dev.leaf_hi_g,
+                              dev.n)
     if dev.node_lam.shape[0] == 0:   # degenerate tree: the root is the only leaf
         routed = jnp.zeros(len(qs), jnp.int32)
     else:
-        edge_lb = ops.lb_isax(paa_q, dev.rt_lo, dev.rt_hi, dev.n)
+        edge_lb = ops.lb_paa_interval(prep[0], prep[1], dev.rt_lo, dev.rt_hi,
+                                      dev.n)
         routed = _descend_device(
             sax_q, dev.node_csl, dev.node_shift, dev.node_lam,
             dev.rt_parent, dev.rt_sid, dev.rt_leaf, dev.rt_child,
@@ -389,8 +478,8 @@ def approximate_search_device_batch(index: DumpyIndex, qs: np.ndarray, k: int,
     # with the duplicate margin and segment-min-dedup on device
     kk = min(_result_margin(dev, k), nbr * dev.lmax)
     k_out = min(k, nbr * dev.lmax)
-    ids, d2, leaves = _leaf_topk_device(dev, qs_dev, lbq, routed,
-                                        k=k_out, kk=kk, nbr=nbr)
+    ids, d2, leaves = _leaf_topk_device(dev, qs_dev, prep, lbq, routed,
+                                        k=k_out, kk=kk, nbr=nbr, metric=met)
     return (np.asarray(ids).astype(np.int64), np.sqrt(np.asarray(d2)),
             np.asarray(leaves))
 
@@ -426,18 +515,26 @@ def _descend_subtree(dev: DeviceIndex, sax_q: jax.Array, edge_lb: jax.Array,
     return pm, se
 
 
-def _sibling_schedule(dev: DeviceIndex, paa_q: jax.Array, lbq: jax.Array,
-                      pm: jax.Array, se: jax.Array, *, nbr: int) -> jax.Array:
+def _sibling_schedule(dev: DeviceIndex, prep: tuple, lbq: jax.Array,
+                      pm: jax.Array, se: jax.Array, *, nbr: int,
+                      span_cap: int) -> jax.Array:
     """Per-query leaf visit schedule ``[Q, nbr]`` over the stop subtree.
 
     Mirrors the host order exactly: the target subtree (the stop edge's
     span) ranks first, the remaining siblings of the parent group by
-    (MINDIST, span begin), and leaves inside every subtree by
-    (MINDIST, leaf id); the overall schedule is the ``nbr`` smallest
+    (interval MINDIST, span begin), and leaves inside every subtree by
+    (leaf LB, leaf id); the overall schedule is the ``nbr`` smallest
     (sibling rank, leaf LB, leaf id) keys, which equals the host's
-    budget-truncated walk because sibling spans partition the parent span."""
+    budget-truncated walk because sibling spans partition the parent span.
+
+    The sort runs over a per-query window of ``span_cap`` leaf ids starting
+    at the stop subtree's span begin — subtree spans are contiguous, and
+    ``span_cap`` (``FlatRouting.stop_span_cap``) bounds every reachable
+    parent span, so the window always covers the schedulable leaves without
+    lexsorting all ``L`` leaves per query (ROADMAP: schedule width)."""
     Q, L = lbq.shape
     gmax = dev.gmax
+    seg_lo, seg_hi = prep[0], prep[1]
     i32max = jnp.iinfo(jnp.int32).max
     tb = dev.rt_begin[se]                                     # [Q]
     goff = dev.grp_off[pm]
@@ -446,9 +543,9 @@ def _sibling_schedule(dev: DeviceIndex, paa_q: jax.Array, lbq: jax.Array,
     gi = jnp.clip(gi, 0, dev.grp_begin.shape[0] - 1)          # [Q, gmax]
     valid = jnp.arange(gmax)[None, :] < gcnt[:, None]
     m_begin = jnp.where(valid, dev.grp_begin[gi], i32max)
-    # member MINDIST (squared — order-equal to the host's sqrt form)
-    below = jnp.maximum(dev.grp_lo[gi] - paa_q[:, None, :], 0.0)
-    above = jnp.maximum(paa_q[:, None, :] - dev.grp_hi[gi], 0.0)
+    # member interval MINDIST (squared — order-equal to the host sqrt form)
+    below = jnp.maximum(dev.grp_lo[gi] - seg_hi[:, None, :], 0.0)
+    above = jnp.maximum(seg_lo[:, None, :] - dev.grp_hi[gi], 0.0)
     d = jnp.maximum(below, above)
     sib_lb = (dev.n / dev.w) * (d * d).sum(-1)                # [Q, gmax]
     sib_lb = jnp.where(valid, sib_lb, jnp.inf)
@@ -456,22 +553,43 @@ def _sibling_schedule(dev: DeviceIndex, paa_q: jax.Array, lbq: jax.Array,
     # member visit rank: (LB, span begin), target forced first by the -inf
     perm = jnp.lexsort((m_begin, sib_lb), axis=-1)
     rank = jnp.argsort(perm, axis=-1).astype(jnp.int32)       # inverse perm
-    # owning member of every leaf: spans are begin-sorted and partition the
-    # parent span, so one searchsorted per query resolves membership
-    leaf_ids = jnp.arange(L, dtype=jnp.int32)
+    SW = min(max(int(span_cap), 1), L)
+    if SW >= L:
+        # cap covers every leaf (a stop parent near the root): the window
+        # gathers buy nothing — rank all leaves directly as before
+        leaf_ids = jnp.arange(L, dtype=jnp.int32)
+        sidx = jax.vmap(lambda mb: jnp.searchsorted(
+            mb, leaf_ids, side="right"))(m_begin) - 1
+        sidx = jnp.clip(sidx, 0, gmax - 1)
+        leaf_rank = jnp.take_along_axis(rank, sidx, axis=1)   # [Q, L]
+        under = (leaf_ids[None, :] >= dev.node_begin[pm][:, None]) & \
+                (leaf_ids[None, :] < dev.node_end[pm][:, None])
+        leaf_rank = jnp.where(under, leaf_rank, gmax + 1)
+        order = jnp.lexsort((lbq, leaf_rank), axis=-1)        # stable → id
+        return order[:, :nbr].astype(jnp.int32)
+    # per-query window of candidate leaves: the parent span is contiguous
+    # and at most span_cap wide, so [begin, begin + span_cap) covers it
+    win = dev.node_begin[pm][:, None] \
+        + jnp.arange(SW, dtype=jnp.int32)[None, :]            # [Q, SW]
+    winc = jnp.clip(win, 0, L - 1)
+    lbw = jnp.take_along_axis(lbq, winc, axis=1)
+    # owning member of every window leaf: spans are begin-sorted and
+    # partition the parent span, so one searchsorted per query resolves it
     sidx = jax.vmap(
-        lambda mb: jnp.searchsorted(mb, leaf_ids, side="right"))(m_begin) - 1
+        lambda mb, wi: jnp.searchsorted(mb, wi, side="right"))(m_begin,
+                                                               winc) - 1
     sidx = jnp.clip(sidx, 0, gmax - 1)
-    leaf_rank = jnp.take_along_axis(rank, sidx, axis=1)       # [Q, L]
-    under = (leaf_ids[None, :] >= dev.node_begin[pm][:, None]) & \
-            (leaf_ids[None, :] < dev.node_end[pm][:, None])
+    leaf_rank = jnp.take_along_axis(rank, sidx, axis=1)       # [Q, SW]
+    under = win < dev.node_end[pm][:, None]   # win >= begin by construction
     leaf_rank = jnp.where(under, leaf_rank, gmax + 1)
-    order = jnp.lexsort((lbq, leaf_rank), axis=-1)            # stable → id
-    return order[:, :nbr].astype(jnp.int32)
+    order = jnp.lexsort((lbw, leaf_rank), axis=-1)            # stable → id
+    sel = order[:, :nbr]
+    return jnp.take_along_axis(winc, sel, axis=1).astype(jnp.int32)
 
 
-def _scan_leaf_schedule(dev: DeviceIndex, qs: jax.Array, leaves: jax.Array,
-                        *, k: int) -> tuple[jax.Array, jax.Array]:
+def _scan_leaf_schedule(dev: DeviceIndex, qs: jax.Array, prep: tuple,
+                        leaves: jax.Array, *, k: int, metric: Metric = ED
+                        ) -> tuple[jax.Array, jax.Array]:
     """Visit the per-query leaf schedule shard-locally and merge.
 
     Each shard owns the contiguous leaf range ``leaf_bounds[s:s+2]`` of the
@@ -479,7 +597,9 @@ def _scan_leaf_schedule(dev: DeviceIndex, qs: jax.Array, leaves: jax.Array,
     (the rest mask to ``+inf``), producing a local ``[Q, k]`` top-k.  The
     ``[S, Q, k]`` locals then merge exactly like the exact path: transpose/
     reshape (the all-gather under a ``data`` sharding) + segment-min dedup +
-    top-k — so results are bitwise invariant to the shard count."""
+    top-k — so results are bitwise invariant to the shard count.  Candidate
+    distances go through :func:`_dist2_gather`, so DTW candidates prune by
+    LB_Keogh against the shard-local running k-th best."""
     Q, nbr = leaves.shape
     lmax, n, L = dev.lmax, dev.n, dev.n_leaves
     S, Tp = dev.n_shards, dev.shard_rows
@@ -497,11 +617,10 @@ def _scan_leaf_schedule(dev: DeviceIndex, qs: jax.Array, leaves: jax.Array,
             rows = starts[:, None] + jnp.arange(lmax)[None, :]
             rows_c = jnp.clip(rows, 0, Tp - 1)                # [Q, lmax]
             cand = db_s[rows_c]                               # [Q, lmax, n]
-            d2 = ((cand - qs[:, None, :]) ** 2).sum(-1)
             val = (jnp.arange(lmax)[None, :] < sizes[:, None]) \
                 & alive_s[rows_c]
-            d2 = jnp.where(val, d2, jnp.inf)
-            idt = jnp.where(val, ids_s[rows_c], -1)
+            d2 = _dist2_gather(metric, qs, prep, cand, val, topd[:, k - 1])
+            idt = jnp.where(jnp.isinf(d2), -1, ids_s[rows_c])
             return ops.topk_merge(topd, topi, d2, idt)
 
         init = (jnp.full((Q, k), jnp.inf, jnp.float32),
@@ -515,66 +634,79 @@ def _scan_leaf_schedule(dev: DeviceIndex, qs: jax.Array, leaves: jax.Array,
     return _dedup_topk(alld, alli, k)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "nbr", "subtree"))
-def _extended_knn_sharded(dev: DeviceIndex, paa_q: jax.Array,
+@functools.partial(jax.jit,
+                   static_argnames=("k", "nbr", "subtree", "metric",
+                                    "span_cap"))
+def _extended_knn_sharded(dev: DeviceIndex, prep: tuple,
                           sax_q: jax.Array, qs: jax.Array, *, k: int,
-                          nbr: int, subtree: bool
+                          nbr: int, subtree: bool, metric: Metric = ED,
+                          span_cap: int = 0
                           ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Batched Alg. 4 as one XLA program: descent → sibling schedule →
     shard-local scan → all-gather dedup merge.  With ``subtree=False`` (the
     whole tree fits the ``nbr`` budget, or the root is the only leaf) the
     schedule is simply every leaf by (LB, leaf id) — the host's
-    ``parent is None`` branch."""
-    lbq = ops.lb_isax(paa_q, dev.leaf_lo_g, dev.leaf_hi_g, dev.n)
+    ``parent is None`` branch.  All bounds are the metric's interval
+    MINDIST; ``span_cap`` bounds the per-query schedule sort width."""
+    lbq = ops.lb_paa_interval(prep[0], prep[1], dev.leaf_lo_g, dev.leaf_hi_g,
+                              dev.n)
     if subtree:
-        edge_lb = ops.lb_isax(paa_q, dev.rt_lo, dev.rt_hi, dev.n)
+        edge_lb = ops.lb_paa_interval(prep[0], prep[1], dev.rt_lo, dev.rt_hi,
+                                      dev.n)
         pm, se = _descend_subtree(dev, sax_q, edge_lb, nbr=nbr)
-        leaves = _sibling_schedule(dev, paa_q, lbq, pm, se, nbr=nbr)
+        leaves = _sibling_schedule(dev, prep, lbq, pm, se, nbr=nbr,
+                                   span_cap=span_cap or dev.n_leaves)
     else:
         order = jnp.argsort(lbq, axis=-1)                     # stable → id
         leaves = order[:, :nbr].astype(jnp.int32)
-    d2, ids = _scan_leaf_schedule(dev, qs, leaves, k=k)
+    d2, ids = _scan_leaf_schedule(dev, qs, prep, leaves, k=k, metric=metric)
     return d2, ids, leaves
 
 
 def extended_search_device_batch(index: DumpyIndex, qs: np.ndarray, k: int,
                                  nbr: int = 1, chunk: int = 2048, mesh=None,
                                  dev: DeviceIndex | None = None,
-                                 rerank: bool = True
+                                 rerank: bool = True,
+                                 metric: str | Metric = "ed",
+                                 band: int | None = None
                                  ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Batched extended approximate kNN (paper Alg. 4, vectorized over
     queries): ``qs [Q, n]`` → ``(ids [Q, k], d [Q, k], leaves [Q, nbr'])``
     with ``nbr' = min(nbr, n_leaves)``; short results pad ``id -1 / d inf``.
 
     The visit set per query is exactly the host ``extended_search`` schedule
-    (target subtree first, then LB-ordered siblings, LB-ordered leaves
-    within), so ``nbr=1`` degenerates to the approximate answer and the k-th
-    distance is monotone in ``nbr``.  With ``mesh`` (or a pre-sharded
-    ``dev``) the leaf scan runs shard-local and merges through the same
-    all-gather + segment-min dedup as the exact path — bitwise invariant to
-    the shard count.
+    at the same metric (target subtree first, then LB-ordered siblings,
+    LB-ordered leaves within), so ``nbr=1`` degenerates to the approximate
+    answer and the k-th distance is monotone in ``nbr``.  With ``mesh`` (or
+    a pre-sharded ``dev``) the leaf scan runs shard-local and merges through
+    the same all-gather + segment-min dedup as the exact path — bitwise
+    invariant to the shard count.  The per-query schedule sorts only the
+    stop subtree's contiguous span (``FlatRouting.stop_span_cap``), not all
+    ``L`` leaves.
 
     ``rerank=True`` (default) finishes with the k-sized host re-rank for
     bitwise (ids, dists) parity with ``extended_search``; serving passes
     ``rerank=False`` to keep the whole path on device (ids ordered by the
     device d², distances returned as ``sqrt`` of the device form)."""
     qs = np.ascontiguousarray(np.atleast_2d(qs), np.float32)
+    met = resolve(metric, qs.shape[1], band)
     if dev is None:
         dev = index.device_index(chunk=chunk, n_shards=_mesh_shards(mesh),
                                  mesh=mesh)
     sax_p = index.params.sax
     qs_dev = jnp.asarray(qs)
-    paa_q, sax_q = _encode_batch(qs_dev, sax_p.w, sax_p.b)
-    sax_q = sax_q.astype(jnp.int32)
+    prep, sax_q = _prep_batch(met, qs_dev, sax_p.w, sax_p.b)
     L = dev.n_leaves
     nbr_eff = max(min(int(nbr), L), 1)
     subtree = dev.node_lam.shape[0] > 0 and L > nbr_eff
+    span_cap = index.routing_flat.stop_span_cap(nbr_eff) if subtree else 0
     kk = _result_margin(dev, k) + (8 if rerank else 0)
-    d2, ids, leaves = _extended_knn_sharded(dev, paa_q, sax_q, qs_dev,
+    d2, ids, leaves = _extended_knn_sharded(dev, prep, sax_q, qs_dev,
                                             k=kk, nbr=nbr_eff,
-                                            subtree=subtree)
+                                            subtree=subtree, metric=met,
+                                            span_cap=span_cap)
     if rerank:
-        ids_out, d_out = _finalize_exact(index, qs, np.asarray(ids), k)
+        ids_out, d_out = _finalize_exact(index, qs, np.asarray(ids), k, met)
         return ids_out, d_out, np.asarray(leaves)
     ids_np = np.asarray(ids)[:, :k]
     d_np = np.sqrt(np.asarray(d2))[:, :k]

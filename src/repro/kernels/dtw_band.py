@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: masked banded DTW — the fused DP of the DTW search
+paths (ROADMAP: batched DTW exact search end-to-end).
+
+After leaf/span pruning (``lb_paa_interval`` on envelope summaries) and the
+candidate-level LB_Keogh pre-filter, the surviving candidates pay the exact
+banded DP.  This kernel fuses mask + cutoff + DP so pruned candidates skip
+the work instead of paying it under a where-mask:
+
+* the DP walks the ``2n-1`` anti-diagonals (cells of diagonal ``d`` depend
+  only on diagonals ``d-1``/``d-2``), so the sequential depth is O(n) and
+  every step is one VPU-shaped ``(block_m, n)`` update held in registers/
+  VMEM — no HBM traffic between diagonals;
+* the per-tile ``while_loop`` exits as soon as every lane in the tile is
+  dead: a lane starts dead when its LB_Keogh mask is off, and dies when the
+  min DP value over its last two diagonals exceeds the cutoff τ² (every
+  warping path crosses a cell of diagonal ``d`` or ``d-1`` and path values
+  only grow, so the final distance is bounded below by that min);
+* tiles whose mask is entirely off are skipped wholesale via ``pl.when``.
+
+Masked / abandoned lanes come back ``+inf`` — exactly the convention the
+top-k merge consumes.  Off-TPU callers use the jnp twin
+(``core.lb.dtw2_masked_batch_jnp``) through ``ops.dtw_band``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(qpad_ref, x_ref, mask_ref, cut_ref, o_ref, *, r: int):
+    n = qpad_ref.shape[1] // 3
+    bm = x_ref.shape[0]
+    INF = jnp.float32(jnp.inf)
+    xs = x_ref[...]                       # (bm, n)
+    qpad = qpad_ref[...]                  # (1, 3n):  q[d - j] = qpad[n + d - j]
+    mask = mask_ref[...][0] > 0.5         # (bm,)
+    cutoff2 = cut_ref[...][0, 0]
+    o_ref[...] = jnp.full((1, bm), INF)
+
+    @pl.when(mask.any())
+    def _():
+        # 2D iota: Mosaic rejects 1D iota shapes on real TPU
+        jidx = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)   # (1, n)
+
+        def cond(carry):
+            d, _, _, alive = carry
+            return (d < 2 * n - 1) & alive.any()
+
+        def body(carry):
+            d, dm2, dm1, alive = carry
+            i = d - jidx                                     # (1, n)
+            inband = (i >= 0) & (i < n) & (jnp.abs(i - jidx) <= r)
+            qd = jnp.flip(
+                jax.lax.dynamic_slice(qpad, (0, d + 1), (1, n)), axis=1)
+            c = (xs - qd) ** 2                               # (bm, n)
+            left = jnp.concatenate(
+                [jnp.full((bm, 1), INF), dm1[:, :-1]], axis=1)
+            diag = jnp.concatenate(
+                [jnp.full((bm, 1), INF), dm2[:, :-1]], axis=1)
+            best = jnp.minimum(jnp.minimum(dm1, left), diag)
+            best = jnp.where((d == 0) & (jidx == 0), 0.0, best)
+            out = jnp.where(inband, c + best, INF)
+            lane_min = jnp.minimum(out.min(axis=1), dm1.min(axis=1))
+            return d + 1, dm1, out, alive & (lane_min <= cutoff2)
+
+        init = (jnp.int32(0), jnp.full((bm, n), INF),
+                jnp.full((bm, n), INF), mask)
+        _, _, dm1, alive = jax.lax.while_loop(cond, body, init)
+        o_ref[...] = jnp.where(alive, dm1[:, n - 1], INF)[None, :]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("r", "block_m", "interpret"))
+def dtw_band(qs: jax.Array, xs: jax.Array, mask: jax.Array,
+             cutoff2: jax.Array, *, r: int, block_m: int = 128,
+             interpret: bool = True) -> jax.Array:
+    """Masked banded DTW²: ``qs [Q, n]``, ``xs [m, n]``, ``mask [Q, m]``,
+    ``cutoff2 [Q]`` → squared distances ``[Q, m] f32`` (``+inf`` on masked /
+    abandoned / padded lanes).  Grid: (query, candidate-block)."""
+    Q, n = qs.shape
+    m = xs.shape[0]
+    mp = -(-m // block_m) * block_m
+    qs_p = qs.astype(jnp.float32)
+    zpad = jnp.zeros((Q, n), jnp.float32)
+    qpad = jnp.concatenate([zpad, qs_p, zpad], axis=1)       # [Q, 3n]
+    xs_p = jnp.pad(xs.astype(jnp.float32), ((0, mp - m), (0, 0)))
+    mask_p = jnp.pad(mask.astype(jnp.float32), ((0, 0), (0, mp - m)))
+    cut = cutoff2.astype(jnp.float32).reshape(Q, 1)
+
+    grid = (Q, mp // block_m)
+    out = pl.pallas_call(
+        functools.partial(_kernel, r=r),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 3 * n), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_m, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, block_m), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Q, mp), jnp.float32),
+        interpret=interpret,
+    )(qpad, xs_p, mask_p, cut)
+    return out[:, :m]

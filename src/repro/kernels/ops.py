@@ -9,6 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from . import dtw_band as _dtw
 from . import lb_isax as _lb
 from . import lb_keogh as _lbk
 from . import pairwise_l2 as _pl2
@@ -41,9 +42,33 @@ def lb_isax(paa_q: jax.Array, lo: jax.Array, hi: jax.Array, n: int) -> jax.Array
     return _lb.lb_isax(paa_q, lo, hi, n=n, interpret=False)
 
 
+def lb_paa_interval(seg_lo: jax.Array, seg_hi: jax.Array, lo: jax.Array,
+                    hi: jax.Array, n: int) -> jax.Array:
+    """Squared interval MINDIST ``[Q, L]`` — the metric-generic pruning
+    scan: ED feeds the degenerate interval (PAA, PAA), DTW the LB_Keogh
+    envelope summary (see ``core.metric``).  Pallas on TPU, fused-jnp
+    oracle elsewhere."""
+    if _interpret():
+        from repro.core.lb import lb_interval_jnp
+        return lb_interval_jnp(seg_lo, seg_hi, lo, hi, n)
+    return _lb.lb_paa_interval(seg_lo, seg_hi, lo, hi, n=n, interpret=False)
+
+
 def lb_keogh(x: jax.Array, U: jax.Array, L: jax.Array) -> jax.Array:
     """Squared LB_Keogh per candidate (DTW pre-filter)."""
     return _lbk.lb_keogh(x, U, L, interpret=_interpret())
+
+
+def dtw_band(qs: jax.Array, xs: jax.Array, mask: jax.Array,
+             cutoff2: jax.Array, r: int) -> jax.Array:
+    """Masked banded DTW² ``[Q, m]`` with cutoff early-abandon — the fused
+    DP of the DTW search paths (masked lanes skip work, dead tiles skip
+    entirely).  Pallas kernel on TPU; off-TPU the jnp anti-diagonal twin
+    (one XLA while_loop, same masking semantics)."""
+    if _interpret():
+        from repro.core.lb import dtw2_masked_batch_jnp
+        return dtw2_masked_batch_jnp(qs, xs, r, mask, cutoff2)
+    return _dtw.dtw_band(qs, xs, mask, cutoff2, r=r, interpret=False)
 
 
 def knn_from_leaves(q: jax.Array, db_ordered: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:

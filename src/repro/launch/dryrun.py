@@ -221,6 +221,13 @@ def lower_dumpy_cell(mesh, mesh_name: str, kind: str) -> dict:
                                             length=length, w=w)
             compiled = lowered.compile()
             t_compile = time.time() - t0
+        elif kind == "search_dtw":
+            from repro.core.distributed import lower_search_dtw
+            t0 = time.time()
+            lowered = lower_search_dtw(mesh, n_series=n_series,
+                                       length=length, w=w)
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
         else:
             L = 16384
             q_abs = jax.ShapeDtypeStruct((64, length), jnp.float32)
@@ -276,7 +283,7 @@ def main() -> None:
             mesh_name = "multi_pod_2x16x16" if multi else "pod_16x16"
             mesh = make_production_mesh(multi_pod=multi)
             for kind in ("build", "search", "search_sharded",
-                         "search_extended"):
+                         "search_extended", "search_dtw"):
                 rec = lower_dumpy_cell(mesh, mesh_name, kind)
                 path = os.path.join(args.out, f"dumpy-{kind}__{mesh_name}.json")
                 os.makedirs(args.out, exist_ok=True)

@@ -37,8 +37,16 @@ class KnnSoftmaxStats:
 
 class KnnSoftmaxHead:
     def __init__(self, lm_head: np.ndarray, *, w: int = 8, th: int = 256,
-                 r_candidates: int = 512, nbr_nodes: int = 8):
+                 r_candidates: int = 512, nbr_nodes: int = 8,
+                 metric: str = "ed", band: int | None = None):
         """``lm_head [d_model, vocab]`` — the output embedding matrix.
+
+        ``metric``/``band`` select the retrieval distance and thread through
+        both the host and the batched device extended search.  The default
+        (and the only choice for which the MIPS augmentation below is exact)
+        is ED; ``"dtw"`` serves warping-invariant retrieval over
+        series-valued rows (e.g. when the head indexes raw series rather
+        than embeddings).
 
         Maximum-inner-product search reduces to Euclidean kNN by the standard
         augmentation: index ``x' = [x, sqrt(M^2 - |x|^2)]`` (all rows then
@@ -69,6 +77,8 @@ class KnnSoftmaxHead:
         self.w = w
         self.r = r_candidates
         self.nbr = nbr_nodes
+        from repro.core.metric import resolve
+        self.metric = resolve(metric, series.shape[1], band)
         self.stats = KnnSoftmaxStats()
 
     def candidates(self, h: np.ndarray) -> np.ndarray:
@@ -76,7 +86,8 @@ class KnnSoftmaxHead:
         q = np.concatenate([np.asarray(h, np.float32), [0.0]])
         q = (q - self.mu) / self.sd   # same isometry(+scale) as the index
         q = np.pad(q, (0, self.pad)).astype(np.float32)
-        ids, _, _ = extended_search(self.index, q, self.r, self.nbr)
+        ids, _, _ = extended_search(self.index, q, self.r, self.nbr,
+                                    metric=self.metric)
         return ids
 
     def logits_sparse(self, h: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
@@ -121,7 +132,7 @@ class KnnSoftmaxHead:
         ids, _, _ = extended_search_device_batch(
             self.index, self._encode_queries(H), self.r,
             nbr=(self.nbr if nbr is None else nbr),
-            dev=self.device_index, rerank=False)
+            dev=self.device_index, rerank=False, metric=self.metric)
         return ids
 
     def step_batch(self, H: np.ndarray, track_exact: bool = True,

@@ -102,3 +102,70 @@ def test_lb_keogh_lower_bounds_dtw():
                               interpret=True))
     for i, x in enumerate(xs):
         assert np.sqrt(lb2[i]) <= dtw_np(q, x, band) + 1e-3
+
+
+@pytest.mark.parametrize("Q,L,w,n", [(1, 1, 8, 64), (9, 77, 16, 128),
+                                     (3, 600, 8, 64)])
+def test_lb_paa_interval_sweep(Q, L, w, n):
+    """The interval-MINDIST kernel vs the fused-jnp oracle, and its
+    degenerate case vs the historical ED kernel (bitwise)."""
+    from repro.core.lb import lb_interval_jnp, mindist_jnp
+    from repro.kernels.lb_isax import lb_paa_interval
+    lo = RNG.standard_normal((L, w)).astype(np.float32)
+    hi = lo + np.abs(RNG.standard_normal((L, w))).astype(np.float32)
+    sl = RNG.standard_normal((Q, w)).astype(np.float32)
+    sh = sl + np.abs(RNG.standard_normal((Q, w))).astype(np.float32)
+    got = lb_paa_interval(jnp.asarray(sl), jnp.asarray(sh), jnp.asarray(lo),
+                          jnp.asarray(hi), n=n, interpret=True)
+    want = lb_interval_jnp(jnp.asarray(sl), jnp.asarray(sh), jnp.asarray(lo),
+                           jnp.asarray(hi), n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-5)
+    deg = lb_isax(jnp.asarray(sl), jnp.asarray(lo), jnp.asarray(hi), n=n,
+                  interpret=True)
+    degw = mindist_jnp(jnp.asarray(sl), jnp.asarray(lo), jnp.asarray(hi), n)
+    np.testing.assert_array_equal(np.asarray(deg), np.asarray(degw))
+
+
+@pytest.mark.parametrize("Q,m,n,r,bm", [(1, 1, 64, 6, 8), (3, 50, 64, 6, 16),
+                                        (2, 20, 96, 10, 32)])
+def test_dtw_band_kernel_sweep(Q, m, n, r, bm):
+    """The Pallas masked band-DP kernel vs the host DTW reference, plus the
+    mask/cutoff semantics (masked lanes +inf, survivors exact)."""
+    from repro.core.lb import dtw_np
+    from repro.kernels.dtw_band import dtw_band
+    qs = RNG.standard_normal((Q, n)).astype(np.float32)
+    xs = RNG.standard_normal((m, n)).astype(np.float32)
+    mask = jnp.ones((Q, m), bool)
+    cut = jnp.full((Q,), jnp.inf)
+    d2 = np.asarray(dtw_band(jnp.asarray(qs), jnp.asarray(xs), mask, cut,
+                             r=r, block_m=bm, interpret=True))
+    ref = np.array([[dtw_np(q, x, r) for x in xs] for q in qs])
+    np.testing.assert_allclose(np.sqrt(d2), ref, atol=1e-3, rtol=1e-4)
+    # masked lanes skip and report +inf
+    mask2 = mask.at[:, ::2].set(False)
+    d2m = np.asarray(dtw_band(jnp.asarray(qs), jnp.asarray(xs), mask2, cut,
+                              r=r, block_m=bm, interpret=True))
+    assert np.isinf(d2m[:, ::2]).all()
+    np.testing.assert_array_equal(d2m[:, 1::2], d2[:, 1::2])
+    # cutoff abandon never loses a below-cutoff candidate
+    cut2 = jnp.asarray(np.quantile(ref ** 2, 0.3, axis=1).astype(np.float32))
+    d2c = np.asarray(dtw_band(jnp.asarray(qs), jnp.asarray(xs), mask, cut2,
+                              r=r, block_m=bm, interpret=True))
+    below = ref ** 2 < np.asarray(cut2)[:, None] - 1e-3
+    np.testing.assert_allclose(d2c[below], (ref ** 2)[below],
+                               atol=1e-2, rtol=1e-4)
+
+
+def test_ops_dtw_band_cpu_fallback_matches_kernel():
+    """Off-TPU ``ops.dtw_band`` routes to the jnp anti-diagonal twin; both
+    agree with each other (and the kernel sweep above pins the reference)."""
+    from repro.kernels.dtw_band import dtw_band as pallas_dtw
+    qs = jnp.asarray(RNG.standard_normal((2, 64)).astype(np.float32))
+    xs = jnp.asarray(RNG.standard_normal((30, 64)).astype(np.float32))
+    mask = jnp.ones((2, 30), bool)
+    cut = jnp.full((2,), jnp.inf)
+    got = np.asarray(ops.dtw_band(qs, xs, mask, cut, 6))
+    want = np.asarray(pallas_dtw(qs, xs, mask, cut, r=6, block_m=16,
+                                 interpret=True))
+    np.testing.assert_allclose(got, want, atol=1e-3, rtol=1e-4)

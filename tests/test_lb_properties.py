@@ -1,12 +1,13 @@
 """Property tests for the lower-bound invariants — the correctness backbone
 of iSAX-family pruning (any violation silently breaks exact search)."""
 import numpy as np
+import jax.numpy as jnp
 from _propcheck import given, settings, st, hnp
 
 from repro.core.lb import (dtw_batch_jnp, dtw_batch_queries_jnp,
                            dtw_envelope_batch_jnp, dtw_envelope_np, dtw_np,
-                           dtw_topk_batch_jnp, ed_np, envelope_paa_np,
-                           lb_keogh_batch_jnp, lb_keogh_np,
+                           dtw_topk_batch_jnp, dtw_topk_masked_jnp, ed_np,
+                           envelope_paa_np, lb_keogh_batch_jnp, lb_keogh_np,
                            mindist_dtw_bounds_np, mindist_paa_bounds_np,
                            node_bounds_np)
 from repro.core.sax import SaxParams, sax_encode_np
@@ -112,6 +113,80 @@ def test_dtw_topk_prefilter_is_exact(seed):
     for i, q in enumerate(qs):
         ref = np.sort([dtw_np(q, x, band) for x in xs])[:k]
         np.testing.assert_allclose(np.sort(d[i]), ref, atol=1e-3, rtol=1e-4)
+
+
+@given(st.integers(0, 10_000), st.integers(1, 16))
+@settings(max_examples=15, deadline=None)
+def test_lb_keogh_lower_bounds_dtw_random_walks(seed, band):
+    """ROADMAP DTW: on random-walk data (the search paths' regime), squared
+    LB_Keogh stays below squared banded DTW for every (query, candidate)
+    pair at every band."""
+    from repro.data.series import random_walks
+    qs = random_walks(2, N, seed=seed)
+    xs = random_walks(8, N, seed=seed + 1)
+    U, L = dtw_envelope_batch_jnp(jnp.asarray(qs), band)
+    lb = np.asarray(lb_keogh_batch_jnp(jnp.asarray(xs), U, L))
+    true = np.array([[dtw_np(q, x, band) for x in xs] for q in qs])
+    assert (lb <= true + 1e-3).all(), (lb - true).max()
+
+
+@given(st.integers(0, 10_000), st.integers(1, 16))
+@settings(max_examples=10, deadline=None)
+def test_envelope_bounds_lower_bound_dtw_random_walks(seed, band):
+    """``mindist_dtw_bounds_np`` (= the device interval MINDIST with the
+    envelope summary) lower-bounds the min DTW into a leaf region built from
+    random-walk series, across bands."""
+    from repro.data.series import random_walks
+    xs = random_walks(6, N, seed=seed).astype(np.float32)
+    q = random_walks(1, N, seed=seed + 7)[0].astype(np.float32)
+    lo, hi = _leaf_bounds(xs)
+    U, L = dtw_envelope_np(q, band)
+    U_seg, L_seg = envelope_paa_np(U, L, PARAMS.w)
+    lb = mindist_dtw_bounds_np(U_seg, L_seg, lo[None, :], hi[None, :], N)[0]
+    from repro.core.metric import interval_mindist_np
+    lb2 = interval_mindist_np(L_seg, U_seg, lo[None, :], hi[None, :], N)[0]
+    np.testing.assert_array_equal(lb, lb2)          # one formula, two names
+    true = min(dtw_np(q, x, band) for x in xs)
+    assert lb <= true + 1e-3, (lb, true)
+
+
+@given(st.integers(0, 10_000), st.integers(1, 10))
+@settings(max_examples=8, deadline=None)
+def test_dtw_topk_masked_equals_full_scan(seed, band):
+    """The fused masked top-k (LB-ordered blocks + cutoff-threaded DP +
+    suffix-min early termination) returns exactly the full-DP scan's top-k
+    distances on random walks."""
+    from repro.data.series import random_walks
+    qs = jnp.asarray(random_walks(3, N, seed=seed))
+    xs = jnp.asarray(random_walks(40, N, seed=seed + 1))
+    k = 5
+    df, idf = dtw_topk_batch_jnp(qs, xs, band, k)
+    dm, idm = dtw_topk_masked_jnp(qs, xs, band, k, 16)
+    np.testing.assert_allclose(np.sort(np.asarray(dm)),
+                               np.sort(np.asarray(df)), atol=1e-4, rtol=1e-5)
+    for i in range(3):
+        assert set(np.asarray(idm)[i].tolist()) \
+            == set(np.asarray(idf)[i].tolist())
+
+
+@given(st.integers(0, 10_000), st.integers(1, 10))
+@settings(max_examples=8, deadline=None)
+def test_dtw_masked_dp_matches_reference(seed, band):
+    """The anti-diagonal masked DP (unmasked, no cutoff) equals the host
+    banded DTW; masked lanes come back +inf."""
+    from repro.core.lb import dtw2_masked_batch_jnp
+    rng = np.random.default_rng(seed)
+    qs = rng.standard_normal((2, N)).astype(np.float32)
+    xs = rng.standard_normal((9, N)).astype(np.float32)
+    mask = jnp.ones((2, 9), bool).at[:, ::3].set(False)
+    d2 = np.asarray(dtw2_masked_batch_jnp(
+        jnp.asarray(qs), jnp.asarray(xs), band, mask,
+        jnp.full((2,), jnp.inf)))
+    want = np.array([[dtw_np(q, x, band) for x in xs] for q in qs])
+    assert np.isinf(d2[:, ::3]).all()
+    live = np.asarray(mask)
+    np.testing.assert_allclose(np.sqrt(d2[live]), want[live],
+                               atol=1e-3, rtol=1e-4)
 
 
 def test_mindist_zero_when_inside():

@@ -1,0 +1,306 @@
+"""Metric-pluggable device search stack: the batched exact / approximate /
+extended paths at ``metric="dtw"`` must reproduce their host references
+bitwise (after the host re-rank), stay bitwise invariant to the shard count,
+and honor the same edge-case contracts as ED (empty index, ``k > n_alive``
+truncation, tombstones).  The multi-device run is exercised on a forced
+4-device host mesh in a subprocess."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from _propcheck import given, settings, st
+
+from repro.core.build import DumpyParams
+from repro.core.device_index import DeviceIndex
+from repro.core.index import DumpyIndex
+from repro.core.metric import Metric, default_band, resolve
+from repro.core.sax import SaxParams
+from repro.core.search import (_encode_query, approximate_search,
+                               exact_search, extended_search, route_to_leaf)
+from repro.core.search_device import (approximate_search_device_batch,
+                                      exact_search_device_batch,
+                                      extended_search_device_batch)
+from repro.core.split import SplitParams
+from repro.data.series import random_walks
+
+PARAMS = DumpyParams(sax=SaxParams(w=8, b=8), split=SplitParams(th=64))
+FUZZY = DumpyParams(sax=SaxParams(w=8, b=8), split=SplitParams(th=64),
+                    fuzzy_f=0.15)
+
+
+@pytest.fixture(scope="module")
+def built():
+    db = random_walks(1000, 64, seed=0)
+    return db, DumpyIndex.build(db, PARAMS)
+
+
+@pytest.fixture(scope="module")
+def built_fuzzy():
+    db = random_walks(900, 64, seed=2)
+    return db, DumpyIndex.build(db, FUZZY)
+
+
+def test_metric_resolve_contract():
+    assert resolve("ed", 64) == Metric("ed", 0)
+    assert resolve("dtw", 64) == Metric("dtw", default_band(64))
+    assert resolve("dtw", 64, band=3) == Metric("dtw", 3)
+    m = Metric("dtw", 5)
+    assert resolve(m, 128) is m                       # pass-through
+    with pytest.raises(ValueError):
+        Metric("cosine")
+
+
+def test_dtw_exact_device_matches_host(built):
+    db, idx = built
+    qs = random_walks(6, 64, seed=31)
+    ids, d, _ = exact_search_device_batch(idx, qs, 5, metric="dtw")
+    for i, q in enumerate(qs):
+        h_ids, h_d, _ = exact_search(idx, q, 5, metric="dtw")
+        got = ids[i][ids[i] >= 0]
+        np.testing.assert_array_equal(got, h_ids)
+        np.testing.assert_array_equal(d[i][:len(h_d)], h_d)   # bitwise
+
+
+def test_dtw_exact_device_fuzzy_and_tombstones(built_fuzzy):
+    db, idx = built_fuzzy
+    assert idx.stats.n_duplicates > 0
+    qs = random_walks(4, 64, seed=13)
+    ids, _, _ = exact_search_device_batch(idx, qs, 5, metric="dtw")
+    victims = [int(v) for v in ids[0][:2]]
+    for v in victims:
+        idx.delete(v)
+    try:
+        ids2, d2, _ = exact_search_device_batch(idx, qs, 5, metric="dtw")
+        assert not any(v in ids2[0] for v in victims)
+        for row in ids2:
+            got = row[row >= 0]
+            assert len(np.unique(got)) == len(got)     # dedup in the merge
+        for i, q in enumerate(qs):
+            h_ids, h_d, _ = exact_search(idx, q, 5, metric="dtw")
+            np.testing.assert_array_equal(ids2[i][ids2[i] >= 0], h_ids)
+            np.testing.assert_array_equal(d2[i][:len(h_d)], h_d)
+    finally:
+        for v in victims:
+            idx.alive[v] = True
+
+
+def test_dtw_exact_shard_count_invariance(built_fuzzy):
+    db, idx = built_fuzzy
+    qs = random_walks(4, 64, seed=3)
+    i1, d1, _ = exact_search_device_batch(idx, qs, 5, metric="dtw")
+    dev3 = DeviceIndex.from_index(idx, chunk=256, n_shards=3)
+    i3, d3, _ = exact_search_device_batch(idx, qs, 5, dev=dev3, metric="dtw")
+    np.testing.assert_array_equal(i1, i3)
+    np.testing.assert_array_equal(d1, d3)
+
+
+def test_dtw_approx_leaf_and_results_match_host(built):
+    db, idx = built
+    qs = random_walks(8, 64, seed=44)
+    ids, d, leaves = approximate_search_device_batch(idx, qs, 5, metric="dtw")
+    band = default_band(64)
+    for i, q in enumerate(qs):
+        paa_q, sax_q = _encode_query(idx, q)
+        from repro.core.metric import query_prep_np
+        sl, sh, _, _ = query_prep_np(Metric("dtw", band), q, paa_q)
+        node = route_to_leaf(idx, paa_q, sax_q, qseg=(sl, sh))
+        assert leaves[i, 0] == node.leaf_id
+        h_ids, h_d, _ = approximate_search(idx, q, 5, metric="dtw")
+        got = ids[i][ids[i] >= 0][:len(h_ids)]
+        np.testing.assert_array_equal(got, h_ids)
+        np.testing.assert_allclose(d[i][:len(h_d)], h_d, atol=1e-3)
+
+
+def test_dtw_extended_matches_host_and_monotone(built_fuzzy):
+    db, idx = built_fuzzy
+    qs = random_walks(4, 64, seed=55)
+    prev_kth = np.full(len(qs), np.inf)
+    for nbr in (1, 2, 4):
+        ids, d, _ = extended_search_device_batch(idx, qs, 5, nbr=nbr,
+                                                 metric="dtw")
+        for i, q in enumerate(qs):
+            h_ids, h_d, _ = extended_search(idx, q, 5, nbr, metric="dtw")
+            got = ids[i][ids[i] >= 0]
+            np.testing.assert_array_equal(got, h_ids)
+            np.testing.assert_array_equal(d[i][:len(h_d)], h_d)
+            if len(h_d) == 5:                         # full-k answers only
+                kth = d[i][4]
+                assert kth <= prev_kth[i] + 1e-6      # monotone in nbr
+                prev_kth[i] = kth
+
+
+def test_dtw_extended_nbr1_equals_approximate(built):
+    db, idx = built
+    qs = random_walks(6, 64, seed=77)
+    e_ids, _, _ = extended_search_device_batch(idx, qs, 5, nbr=1,
+                                               metric="dtw", rerank=False)
+    a_ids, _, _ = approximate_search_device_batch(idx, qs, 5, metric="dtw")
+    np.testing.assert_array_equal(e_ids, a_ids[:, :e_ids.shape[1]])
+
+
+def test_dtw_band_override_threads_through(built):
+    db, idx = built
+    qs = random_walks(3, 64, seed=91)
+    for band in (2, 12):
+        ids, d, _ = exact_search_device_batch(idx, qs, 3, metric="dtw",
+                                              band=band)
+        for i, q in enumerate(qs):
+            h_ids, h_d, _ = exact_search(idx, q, 3, metric="dtw", band=band)
+            np.testing.assert_array_equal(ids[i][ids[i] >= 0], h_ids)
+            np.testing.assert_array_equal(d[i][:len(h_d)], h_d)
+
+
+def test_dtw_empty_index_returns_empty():
+    idx = DumpyIndex.build(np.zeros((0, 64), np.float32), PARAMS)
+    qs = random_walks(2, 64, seed=1)
+    for metric in ("ed", "dtw"):
+        ids, d, _ = exact_search_device_batch(idx, qs, 3, metric=metric)
+        assert (ids == -1).all() and np.isinf(d).all()
+
+
+def test_dtw_k_exceeding_alive_truncates():
+    db = random_walks(6, 64, seed=8)
+    idx = DumpyIndex.build(db, DumpyParams(sax=SaxParams(w=8, b=8),
+                                           split=SplitParams(th=4)))
+    qs = random_walks(2, 64, seed=9)
+    for metric in ("ed", "dtw"):
+        ids, _, _ = exact_search_device_batch(idx, qs, 10, metric=metric)
+        assert ((ids >= 0).sum(axis=1) == 6).all()
+        idx.delete(0)
+        try:
+            ids, _, _ = exact_search_device_batch(idx, qs, 10, metric=metric)
+            assert ((ids >= 0).sum(axis=1) == 5).all()
+            assert not (ids == 0).any()
+        finally:
+            idx.alive[0] = True
+
+
+def test_stop_span_cap_bounds_every_schedule(built):
+    """The schedule window must cover every reachable stop-parent span, and
+    shrink below L when the tree allows it."""
+    db, idx = built
+    rt = idx.routing_flat
+    L = idx.flat.n_leaves
+    for nbr in (1, 2, 8):
+        cap = rt.stop_span_cap(nbr)
+        assert 1 <= cap <= L
+        stop = (rt.edge_leaf >= 0) | (rt.edge_nl <= nbr)
+        widths = (rt.node_end - rt.node_begin)[rt.edge_parent[stop]]
+        assert cap == widths.max()
+
+
+def test_sibling_schedule_window_bitwise_equals_full_sort(built):
+    """The span-cap window branch of ``_sibling_schedule`` must produce the
+    exact same schedule/results as the full-width sort whenever the window
+    covers every query's stop-parent span (the correctness contract that
+    lets ``stop_span_cap`` bound the sort width)."""
+    import jax.numpy as jnp
+    from repro.core.metric import ED
+    from repro.core import search_device as sd
+    from repro.kernels import ops
+    db, idx = built
+    dev = idx.device_index()
+    L = dev.n_leaves
+    qs = np.ascontiguousarray(random_walks(16, 64, seed=5), np.float32)
+    prep, sax_q = sd._prep_batch(ED, jnp.asarray(qs), 8, 8)
+    edge_lb = ops.lb_paa_interval(prep[0], prep[1], dev.rt_lo, dev.rt_hi,
+                                  dev.n)
+    for nbr in (1, 2):
+        pm, _ = sd._descend_subtree(dev, sax_q, edge_lb, nbr=nbr)
+        widths = (np.asarray(dev.node_end) - np.asarray(dev.node_begin)
+                  )[np.asarray(pm)]
+        sub = widths < L                 # queries stopping below the root
+        if sub.sum() < 2:
+            continue
+        qsub = qs[sub]
+        psub, ssub = sd._prep_batch(ED, jnp.asarray(qsub), 8, 8)
+        cap = int(widths[sub].max())
+        full = sd._extended_knn_sharded(dev, psub, ssub, jnp.asarray(qsub),
+                                        k=7, nbr=nbr, subtree=True,
+                                        metric=ED, span_cap=L)
+        win = sd._extended_knn_sharded(dev, psub, ssub, jnp.asarray(qsub),
+                                       k=7, nbr=nbr, subtree=True,
+                                       metric=ED, span_cap=cap)
+        assert cap < L                   # the window branch actually ran
+        for a, b in zip(full, win):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=3, deadline=None)
+def test_dtw_random_batches_parity(seed):
+    db = random_walks(600, 64, seed=3)
+    idx = DumpyIndex.build(db, PARAMS)
+    qs = random_walks(3, 64, seed=60_000 + seed)
+    ids, d, _ = exact_search_device_batch(idx, qs, 5, metric="dtw")
+    for i, q in enumerate(qs):
+        h_ids, h_d, _ = exact_search(idx, q, 5, metric="dtw")
+        np.testing.assert_array_equal(ids[i][ids[i] >= 0], h_ids)
+        np.testing.assert_array_equal(d[i][:len(h_d)], h_d)
+
+
+def test_dtw_multidevice_bitwise_parity_subprocess():
+    """DTW device batch results on a forced 4-device mesh must be bitwise
+    equal to host ``exact_search(metric="dtw")`` / ``extended_search`` under
+    fuzzy + tombstone layouts, and bitwise invariant to the shard count."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys; sys.path.insert(0, "src")
+import json
+import numpy as np
+import jax
+from repro.core.build import DumpyParams
+from repro.core.index import DumpyIndex
+from repro.core.sax import SaxParams
+from repro.core.split import SplitParams
+from repro.core.search import exact_search, extended_search
+from repro.core.search_device import (exact_search_device_batch,
+                                      extended_search_device_batch)
+from repro.data.series import random_walks
+from repro.distributed.sharding import make_mesh
+
+assert len(jax.devices()) == 4
+db = random_walks(800, 64, seed=2)
+idx = DumpyIndex.build(db, DumpyParams(sax=SaxParams(w=8, b=8),
+                                       split=SplitParams(th=64),
+                                       fuzzy_f=0.15))
+assert idx.stats.n_duplicates > 0
+idx.delete(3); idx.delete(17)
+qs = random_walks(4, 64, seed=11)
+mesh = make_mesh((4,), ("data",))
+ids1, d1, _ = exact_search_device_batch(idx, qs, 5, metric="dtw")
+ids4, d4, _ = exact_search_device_batch(idx, qs, 5, mesh=mesh, metric="dtw")
+dev = idx._device_cache[(256, 4, mesh)][0]
+assert len(dev.db.sharding.device_set) == 4, dev.db.sharding
+assert (ids1 == ids4).all() and (d1 == d4).all()                # bitwise
+for i, q in enumerate(qs):
+    h_ids, h_d, _ = exact_search(idx, q, 5, metric="dtw")
+    got = ids4[i][ids4[i] >= 0]
+    assert len(np.unique(got)) == len(got)          # dedup in the merge
+    assert 3 not in got and 17 not in got           # tombstones respected
+    np.testing.assert_array_equal(got, h_ids)
+    np.testing.assert_array_equal(d4[i][:len(h_d)], h_d)
+for nbr in (1, 4):
+    e1, ed1, _ = extended_search_device_batch(idx, qs, 5, nbr=nbr,
+                                              metric="dtw")
+    e4, ed4, _ = extended_search_device_batch(idx, qs, 5, nbr=nbr,
+                                              mesh=mesh, metric="dtw")
+    assert (e1 == e4).all() and (ed1 == ed4).all()              # bitwise
+    for i, q in enumerate(qs):
+        h_ids, h_d, _ = extended_search(idx, q, 5, nbr, metric="dtw")
+        got = e4[i][e4[i] >= 0]
+        np.testing.assert_array_equal(got, h_ids)
+        np.testing.assert_array_equal(ed4[i][:len(h_d)], h_d)
+print(json.dumps({"ok": True, "n_dev": len(jax.devices())}))
+"""
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))), env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["ok"] and rec["n_dev"] == 4
