@@ -1,11 +1,13 @@
 #!/usr/bin/env bash
 # Tier-1 verification: the full offline test suite (see tests/README.md),
-# followed by the seconds-scale batched-search benchmark smoke (--quick:
-# exercises the DeviceIndex serving paths end-to-end — exact, approximate,
-# the extended (Alg. 4) nbr sweep with recall@k, and the DTW metric smoke
-# (batched exact DTW + fused masked band-DP top-k) — no baseline update).
+# followed by the seconds-scale benchmark smokes (--quick, no baseline
+# updates): the batched-search smoke (DeviceIndex serving paths end-to-end —
+# exact, approximate, the extended (Alg. 4) nbr sweep with recall@k, and the
+# DTW metric smoke) and the build smoke (host vs device backend with the
+# layout-parity check inline).
 # Usage: scripts/verify.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.bench_batch_search --quick
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.bench_build --quick

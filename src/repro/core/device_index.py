@@ -147,12 +147,17 @@ class DeviceIndex:
     # -- construction --------------------------------------------------------
     @classmethod
     def from_index(cls, index: "DumpyIndex", chunk: int = 2048,
-                   n_shards: int = 1) -> "DeviceIndex":
+                   n_shards: int = 1, *, db_device=None) -> "DeviceIndex":
         """Build the full device state from a host ``DumpyIndex``.
 
         ``n_shards`` fixes the leading axis; the shard boundaries are the
         leaf boundaries nearest the ideal ``total/S`` cuts, so a leaf never
         straddles two shards and the span loop needs no cross-shard windows.
+
+        ``db_device`` — optional device-resident ``[total, n]`` array already
+        in leaf-contiguous order (the device build's gather output): the data
+        plane is then assembled on device and the host ``db_ordered``
+        permutation is never materialized.
         """
         flat = index.flat
         offs = np.asarray(flat.leaf_offsets, np.int64)
@@ -196,7 +201,8 @@ class DeviceIndex:
             r0, r1 = row_bounds[s], row_bounds[s + 1]
             l0, l1 = cut_leaf[s], cut_leaf[s + 1]
             Ts = r1 - r0
-            db_sh[s, :Ts] = index.db_ordered[r0:r1]
+            if db_device is None:
+                db_sh[s, :Ts] = index.db_ordered[r0:r1]
             alive_sh[s, :Ts] = alive_ord[r0:r1]
             ids_sh[s, :Ts] = order[r0:r1]
             lo_sh[s, :l1 - l0] = flat.leaf_lo[l0:l1]
@@ -250,8 +256,17 @@ class DeviceIndex:
                                  np.full((gmax, w), np.inf, np.float32)])
         grp_hi = np.concatenate([rt.grp_hi,
                                  np.full((gmax, w), np.inf, np.float32)])
+        if db_device is None:
+            db_j = jnp.asarray(db_sh)
+        else:
+            parts = []
+            for s in range(S):
+                r0, r1 = row_bounds[s], row_bounds[s + 1]
+                parts.append(jnp.pad(db_device[r0:r1],
+                                     ((0, Tp - (r1 - r0)), (0, 0))))
+            db_j = parts[0][None] if S == 1 else jnp.stack(parts)
         dev = cls(
-            db=jnp.asarray(db_sh), alive=jnp.asarray(alive_sh),
+            db=db_j, alive=jnp.asarray(alive_sh),
             ids=jnp.asarray(ids_sh),
             leaf_lo=jnp.asarray(lo_sh), leaf_hi=jnp.asarray(hi_sh),
             win_start=jnp.asarray(win_start), win_lead=jnp.asarray(win_lead),

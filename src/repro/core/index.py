@@ -267,28 +267,78 @@ class DumpyIndex:
                  stats: BuildStats):
         self.params = params
         self.root = root
-        self.flat = flat
         self.db = db
         self.paa = paa
         self.sax = sax
         self.stats = stats
         self.alive = np.ones(db.shape[0], bool)
-        self.db_ordered = db[flat.order]
         self._pending: list[np.ndarray] = []   # §5.6 insertion buffer
         self._routing_flat: FlatRouting | None = None
+        # Materialized layout state — rebuilt lazily after updates (§5.6):
+        # ``_dirty`` marks the tree as changed since ``_flat`` was derived.
+        self._flat = flat
+        self._dirty = False
+        self._db_ordered: np.ndarray | None = None
+        self._db_ordered_dev = None            # device-resident copy, if any
+        self._n_layout_builds = 0              # observability (tests)
         # (chunk, n_shards) → (DeviceIndex, alive snapshot); invalidated by
         # updates (insert rebuilds the layout; delete refreshes the mask)
         self._device_cache: dict = {}
 
     # -- construction --------------------------------------------------------
     @classmethod
-    def build(cls, db: np.ndarray, params: DumpyParams | None = None) -> "DumpyIndex":
+    def build(cls, db: np.ndarray, params: DumpyParams | None = None,
+              backend: str = "host") -> "DumpyIndex":
+        """Build the index with either the host backend (reference Alg. 1
+        recursion) or the device backend (bottom-up grouped build,
+        ``core/build_device.py``).  Both produce the same layout up to the
+        tie-breaking documented in ``docs/build_pipeline.md``."""
         params = params or DumpyParams()
-        builder = DumpyBuilder(params)
         db = np.ascontiguousarray(db, dtype=np.float32)
+        if backend == "device":
+            from .build_device import device_build
+            res = device_build(db, params)
+            idx = cls(params, res.root, res.flat, db, res.paa, res.sax,
+                      res.stats)
+            idx._db_ordered_dev = res.db_ordered_dev
+            return idx
+        if backend != "host":
+            raise ValueError(f"unknown build backend: {backend!r}")
+        builder = DumpyBuilder(params)
         root, stats, paa, sax = builder.build(db)
         flat = flatten_tree(root, params.sax.b)
         return cls(params, root, flat, db, paa, sax, stats)
+
+    # -- lazy layout ---------------------------------------------------------
+    @property
+    def flat(self) -> FlatLeaves:
+        """Leaf-contiguous layout; re-derived from the tree on first access
+        after an update instead of once per ``insert``."""
+        if self._dirty:
+            self._rebuild_layout()
+        return self._flat
+
+    @property
+    def db_ordered(self) -> np.ndarray:
+        """The collection permuted into leaf-contiguous layout (lazy: the
+        device build path never materializes it on the host unless asked)."""
+        if self._dirty:
+            self._rebuild_layout()
+        if self._db_ordered is None:
+            self._db_ordered = self.db[self._flat.order]
+        return self._db_ordered
+
+    def _invalidate_layout(self) -> None:
+        self._dirty = True
+        self._db_ordered = None
+        self._db_ordered_dev = None
+        self._routing_flat = None
+        self._device_cache.clear()    # layout changed: device state is stale
+
+    def _rebuild_layout(self) -> None:
+        self._flat = flatten_tree(self.root, self.params.sax.b)
+        self._dirty = False
+        self._n_layout_builds += 1
 
     @property
     def n(self) -> int:
@@ -306,32 +356,49 @@ class DumpyIndex:
         """Append one series; rebuilds the affected subtree when the routing
         constraint (Eq. 3 band) is violated — here triggered on leaf overflow,
         the common case.  Returns the new series id."""
-        series = np.asarray(series, np.float32).reshape(1, -1)
-        new_id = self.db.shape[0]
-        paa_s, sax_s = sax_encode_np(series, self.params.sax)
-        self.db = np.concatenate([self.db, series])
-        self.paa = np.concatenate([self.paa, paa_s])
-        self.sax = np.concatenate([self.sax, sax_s])
-        self.alive = np.append(self.alive, True)
+        return int(self.insert_many(np.asarray(series,
+                                               np.float32).reshape(1, -1))[0])
 
-        # route to target leaf
-        node = self.root
-        while not node.is_leaf:
-            sid = node.route_sid(sax_s[0], self.params.sax.b)
-            child = node.routing.get(sid) or node.children.get(sid)
-            if child is None:            # new region → fresh leaf under node
-                child = self._new_leaf_under(node, sid, sax_s[0])
-            node = child
-        node.series_ids = np.append(node.series_ids, new_id)
-        node.size += 1
-        if node.size > self.params.th:
+    def insert_many(self, batch: np.ndarray) -> np.ndarray:
+        """Append a batch of series in one pass: one encode, one set of array
+        concatenations, one routing loop, each overflowing leaf resplit once
+        after all routing, and a single (lazy) layout invalidation — instead
+        of a full ``flatten_tree`` + db permutation per series.  Returns the
+        new series ids."""
+        batch = np.ascontiguousarray(batch, np.float32)
+        if batch.ndim != 2:
+            batch = batch.reshape(1, -1)
+        m = batch.shape[0]
+        n0 = self.db.shape[0]
+        new_ids = np.arange(n0, n0 + m, dtype=np.int64)
+        paa_b, sax_b = sax_encode_np(batch, self.params.sax)
+        self.db = np.concatenate([self.db, batch])
+        self.paa = np.concatenate([self.paa, paa_b])
+        self.sax = np.concatenate([self.sax, sax_b])
+        self.alive = np.append(self.alive, np.ones(m, bool))
+
+        overflowed: dict[int, TreeNode] = {}
+        for i in range(m):
+            sax_s = sax_b[i]
+            node = self.root
+            while not node.is_leaf:
+                sid = node.route_sid(sax_s, self.params.sax.b)
+                child = node.routing.get(sid) or node.children.get(sid)
+                if child is None:        # new region → fresh leaf under node
+                    child = self._new_leaf_under(node, sid, sax_s)
+                node = child
+            node.series_ids = np.append(node.series_ids, new_ids[i])
+            node.size += 1
+            if node.size > self.params.th:
+                overflowed[id(node)] = node
+        for node in overflowed.values():
             # overflowing leaf — or full pack (§5.6: the pack is dissolved and
             # reorganized; its demoted iSAX word is a valid coarser rectangle,
             # so the adaptive split applies to it directly)
             node.is_pack = False
             self._resplit(node)
-        self._refresh_flat()
-        return new_id
+        self._invalidate_layout()
+        return new_ids
 
     def _new_leaf_under(self, node: TreeNode, sid: int, sax_q: np.ndarray) -> TreeNode:
         lam = len(node.csl)
@@ -348,26 +415,21 @@ class DumpyIndex:
 
     def _resplit(self, leaf: TreeNode) -> None:
         """Re-run the adaptive split on an overflowing leaf (background
-        re-organization in the paper; synchronous here)."""
+        re-organization in the paper; synchronous here).  The fuzzy replica
+        budget is scoped to the leaf's members — work and memory proportional
+        to the subtree, not the collection."""
         builder = DumpyBuilder(self.params)
         stats = BuildStats()
         ids = leaf.series_ids
         leaf.series_ids = None
-        builder._rep_budget = np.full(self.db.shape[0], self.params.max_replica,
-                                      np.int32)
-        builder._split(leaf, ids, self.paa, self.sax, stats)
-
-    def _refresh_flat(self) -> None:
-        self.flat = flatten_tree(self.root, self.params.sax.b)
-        self.db_ordered = self.db[self.flat.order]
-        self._routing_flat = None
-        self._device_cache.clear()    # layout changed: device state is stale
+        builder.split_subtree(leaf, ids, self.paa, self.sax, stats)
 
     @property
     def routing_flat(self) -> FlatRouting:
         """Flat routing tables for the device descent (built lazily; leaf ids
         must come from the current ``flat`` layout, hence after flatten_tree)."""
         if self._routing_flat is None:
+            _ = self.flat                 # ensure leaf ids are current
             self._routing_flat = flatten_routing(self.root, self.params.sax.b)
         return self._routing_flat
 
@@ -383,7 +445,11 @@ class DumpyIndex:
         key = (int(chunk), int(n_shards), mesh)
         cached = self._device_cache.get(key)
         if cached is None:
-            dev = DeviceIndex.from_index(self, chunk=chunk, n_shards=n_shards)
+            # device-built indexes keep db_ordered on device: assemble the
+            # DeviceIndex from those rows without a host round-trip
+            db_device = None if self._dirty else self._db_ordered_dev
+            dev = DeviceIndex.from_index(self, chunk=chunk, n_shards=n_shards,
+                                         db_device=db_device)
             if mesh is not None:
                 dev = dev.shard(mesh)
             self._device_cache[key] = (dev, self.alive.copy())

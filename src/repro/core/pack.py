@@ -23,6 +23,23 @@ def popcount(x: int) -> int:
     return bin(x).count("1")
 
 
+_POP16: np.ndarray | None = None
+
+
+def _popcount_arr(x: np.ndarray) -> np.ndarray:
+    """Vector popcount for int64 arrays (16-bit table, 4 lookups)."""
+    global _POP16
+    if _POP16 is None:
+        t = np.arange(1 << 16, dtype=np.int64)
+        t = (t & 0x5555) + ((t >> 1) & 0x5555)
+        t = (t & 0x3333) + ((t >> 2) & 0x3333)
+        t = (t & 0x0F0F) + ((t >> 4) & 0x0F0F)
+        _POP16 = (t & 0x00FF) + ((t >> 8) & 0x00FF)
+    x = np.asarray(x, np.int64)
+    return (_POP16[x & 0xFFFF] + _POP16[(x >> 16) & 0xFFFF]
+            + _POP16[(x >> 32) & 0xFFFF] + _POP16[(x >> 48) & 0xFFFF])
+
+
 @dataclasses.dataclass
 class Pack:
     value: int              # representative sid (non-masked bits meaningful)
@@ -60,37 +77,55 @@ def pack_leaves(sids: list[int], sizes: list[int], lam: int, *,
     n = len(sids)
     if n == 0:
         return []
+    sids_a = np.asarray(sids, np.int64)
+    sizes_a = np.asarray(sizes, np.int64)
     max_demote = rho * lam
     rng = np.random.default_rng(seed)
     order = rng.permutation(n)
-    sum_size = int(sum(sizes))
+    sum_size = int(sizes_a.sum())
     n_seed = min(max(sum_size // th, 1), n)
 
-    packs: list[Pack] = []
+    # Pack state as parallel arrays so every leaf's "best feasible pack" scan
+    # is one vector pass (the greedy itself is inherently sequential).  The
+    # first-strict-minimum of the scalar scan is np.argmin's first occurrence
+    # of the minimum, so the chosen pack is identical to the scalar loop's.
+    val = np.zeros(n, np.int64)
+    mask = np.zeros(n, np.int64)
+    szs = np.zeros(n, np.int64)
+    nbits = np.zeros(n, np.int64)
+    members: list[list[int]] = []
     seeded = set()
+    P = 0
     for i in order[:n_seed]:
         i = int(i)
-        packs.append(Pack(value=sids[i], mask=0, size=sizes[i], members=[i]))
+        val[P] = sids_a[i]
+        szs[P] = sizes_a[i]
+        members.append([i])
         seeded.add(i)
+        P += 1
 
+    big = lam + 1
     for i in range(n):
         if i in seeded:
             continue
-        sid, size = sids[i], sizes[i]
-        best_pack, best_cost = None, lam + 1
-        for p in packs:
-            if p.size + size > th:
-                continue
-            cost = p.try_cost(sid)
-            if p.demotion_bits() + cost > max_demote:
-                continue
-            if cost < best_cost:
-                best_pack, best_cost = p, cost
-        if best_pack is None:
-            packs.append(Pack(value=sid, mask=0, size=size, members=[i]))
+        sid, size = int(sids_a[i]), int(sizes_a[i])
+        nm = mask[:P] | ((val[:P] ^ sid) & ~mask[:P])
+        pc = _popcount_arr(nm)
+        feas = (szs[:P] + size <= th) & (pc <= max_demote)
+        costs = np.where(feas, pc - nbits[:P], big)
+        j = int(np.argmin(costs)) if P else 0
+        if P and costs[j] < big:
+            mask[j] = nm[j]
+            nbits[j] = pc[j]
+            szs[j] += size
+            members[j].append(i)
         else:
-            best_pack.insert(sid, size, i)
-    return packs
+            val[P] = sid
+            szs[P] = size
+            members.append([i])
+            P += 1
+    return [Pack(value=int(val[j]), mask=int(mask[j]), size=int(szs[j]),
+                 members=members[j]) for j in range(P)]
 
 
 def pack_isax(parent_sym: np.ndarray, parent_card: np.ndarray,

@@ -70,6 +70,23 @@ def segment_variances(sax_node: np.ndarray, b: int) -> np.ndarray:
     return vals.var(axis=0)
 
 
+def weighted_segment_variances(words: np.ndarray, counts: np.ndarray,
+                               b: int) -> np.ndarray:
+    """:func:`segment_variances` from grouped rows: ``(unique word, count)``
+    pairs instead of the raw ``[c_N, w]`` table.  Mathematically identical
+    (population variance weighted by multiplicity); float summation order
+    differs from the row-wise form at the ulp level.
+
+    ``words: [U, w] uint8``, ``counts: [U]`` → ``[w] float64``.
+    """
+    mids = region_midpoints(b)
+    vals = mids[np.asarray(words).astype(np.int64)]        # [U, w]
+    cw = np.asarray(counts, np.float64)[:, None]
+    total = float(cw.sum())
+    mean = (cw * vals).sum(axis=0) / total
+    return (cw * (vals - mean) ** 2).sum(axis=0) / total
+
+
 def objective(child_sizes: np.ndarray, sum_var: float, lam: int,
               th: int, alpha: float) -> float:
     """Eq. 1 for one candidate plan.
@@ -164,6 +181,120 @@ def choose_split_plan(base_hist: np.ndarray,
         dfs(combo, hist)
 
     return tuple(sorted(candidate_segments[i] for i in best_plan))
+
+
+def plan_split(codes: np.ndarray,
+               weights: np.ndarray,
+               seg_vars: np.ndarray,
+               candidate_segments: list[int],
+               c_n: int,
+               params: SplitParams) -> tuple[tuple[int, ...], int]:
+    """Algorithm 2 over *grouped* prefixes: the optimized evaluator used by
+    the bottom-up device build (``core/build_device.py``).
+
+    Where :func:`choose_split_plan` marginalizes one per-row ``2**m``
+    histogram, this takes ``(next-bit code, multiplicity)`` pairs — one entry
+    per distinct SAX word in the node, so per-plan cost scales with the
+    number of distinct words, not rows.  Child-size histograms are exact
+    integers either way, and the same :func:`objective` decides, so the two
+    evaluators agree except on exact score ties: plans are enumerated here in
+    ``lambda``-ascending / lexicographic order (the
+    :func:`brute_force_split_plan` order) with strict improvement, while the
+    DFS of ``choose_split_plan`` visits plans in a different order and may
+    keep a different member of a tied set (the documented tie-breaking of
+    the build-backend parity contract — see ``docs/build_pipeline.md``).
+
+    ``codes`` — ``m``-bit next-bit codes (bit i = ``candidate_segments[i]``,
+    MSB first), one per distinct word (need not be unique: aggregated here);
+    ``weights`` — multiplicities aligned with ``codes``;
+    ``seg_vars`` — per-segment variances aligned with ``candidate_segments``.
+
+    Returns ``(csl ascending, n_plans_evaluated)``.
+    """
+    m = len(candidate_segments)
+    if m == 0:
+        raise ValueError("no splittable segments")
+    if m == 1:
+        return (candidate_segments[0],), 0
+    lam_min, lam_max = lambda_range(c_n, params.th, params.f_low,
+                                    params.f_high, m)
+    codes = np.asarray(codes, np.int64)
+    uc, inv = np.unique(codes, return_inverse=True)
+    uw = np.bincount(inv, weights=np.asarray(weights, np.float64))
+    th, alpha = params.th, params.alpha
+    svp = np.asarray(seg_vars, np.float64)
+
+    n_plans = sum(math.comb(m, lam) for lam in range(lam_min, lam_max + 1))
+    if n_plans > params.max_eval_plans:
+        # Safety valve (never binds for w <= 17): evaluate plans one at a
+        # time in enumeration order until the cap, folding each histogram
+        # directly from the aggregated codes.
+        best_score, best_plan, evals = -math.inf, (0,), 0
+        bitcols = [(uc >> (m - 1 - i)) & 1 for i in range(m)]
+        for lam in range(lam_min, lam_max + 1):
+            for combo in itertools.combinations(range(m), lam):
+                if evals >= params.max_eval_plans:
+                    break
+                sub = bitcols[combo[0]]
+                for pos in combo[1:]:
+                    sub = (sub << 1) | bitcols[pos]
+                hist = np.bincount(sub, weights=uw, minlength=1 << lam)
+                score = objective(hist, float(svp[list(combo)].sum()), lam,
+                                  th, alpha)
+                evals += 1
+                if score > best_score:
+                    best_score, best_plan = score, combo
+        return tuple(sorted(candidate_segments[i] for i in best_plan)), evals
+
+    # Per-level histograms: the top (lam_max) level is folded directly from
+    # the aggregated codes; every lower level is a one-axis marginalization
+    # of a parent plan at the level above (Alg. 2 speedup 3, level-wise).
+    bitcols = [(uc >> (m - 1 - i)) & 1 for i in range(m)]
+    levels: dict[int, tuple[list[tuple[int, ...]], np.ndarray]] = {}
+    combos_top = list(itertools.combinations(range(m), lam_max))
+    H = np.empty((len(combos_top), 1 << lam_max), np.float64)
+    for t, combo in enumerate(combos_top):
+        sub = bitcols[combo[0]]
+        for pos in combo[1:]:
+            sub = (sub << 1) | bitcols[pos]
+        H[t] = np.bincount(sub, weights=uw, minlength=1 << lam_max)
+    levels[lam_max] = (combos_top, H)
+    for lam in range(lam_max - 1, lam_min - 1, -1):
+        p_combos, pH = levels[lam + 1]
+        p_idx = {cb: t for t, cb in enumerate(p_combos)}
+        combos = list(itertools.combinations(range(m), lam))
+        pidx = np.empty(len(combos), np.int64)
+        dpos = np.empty(len(combos), np.int64)
+        for t, cb in enumerate(combos):
+            cbs = set(cb)
+            x = next(j for j in range(m) if j not in cbs)
+            parent = tuple(sorted(cb + (x,)))
+            pidx[t] = p_idx[parent]
+            dpos[t] = parent.index(x)
+        H = np.empty((len(combos), 1 << lam), np.float64)
+        for dp in range(lam + 1):
+            sel = np.flatnonzero(dpos == dp)
+            if not len(sel):
+                continue
+            sub = pH[pidx[sel]].reshape((len(sel),) + (2,) * (lam + 1))
+            H[sel] = sub.sum(axis=1 + dp).reshape(len(sel), -1)
+        levels[lam] = (combos, H)
+
+    # Evaluate lambda-ascending; np.argmax keeps the first (lexicographically
+    # smallest) maximum within a level, strict > keeps the earlier level.
+    best_score, best_plan, evals = -math.inf, (0,), 0
+    for lam in range(lam_min, lam_max + 1):
+        combos, H = levels[lam]
+        sv = svp[np.asarray(combos, np.int64)].sum(axis=1)
+        prox = np.exp(np.sqrt(np.maximum(sv, 0.0) / lam))
+        sigma_f = (H / th).std(axis=1)
+        o = (H > th).mean(axis=1)
+        scores = prox + alpha * np.exp(-(1.0 + o) * sigma_f)
+        evals += len(combos)
+        k = int(np.argmax(scores))
+        if float(scores[k]) > best_score:
+            best_score, best_plan = float(scores[k]), combos[k]
+    return tuple(sorted(candidate_segments[i] for i in best_plan)), evals
 
 
 def brute_force_split_plan(base_hist: np.ndarray,

@@ -1,0 +1,270 @@
+"""Staged build pipeline: host/device backend parity, batch inserts,
+scoped resplits, and persistence after update sequences."""
+import numpy as np
+import pytest
+from _propcheck import given, settings, st
+
+from repro.core.build import (DumpyBuilder, DumpyParams, children_isax,
+                              child_isax, partition_by_sid)
+from repro.core.index import DumpyIndex
+from repro.core.sax import SaxParams, region_midpoints
+from repro.core.split import (SplitParams, brute_force_split_plan, plan_split,
+                              segment_variances, weighted_segment_variances)
+from repro.data.series import clustered_series, random_walks
+
+PARAMS = DumpyParams(sax=SaxParams(w=8, b=8), split=SplitParams(th=128))
+
+ROUTING_FIELDS = ("node_csl", "node_shift", "node_lam", "edge_parent",
+                  "edge_sid", "edge_leaf", "edge_child", "edge_nl",
+                  "edge_begin", "edge_end", "node_begin", "node_end",
+                  "leaf_parent", "grp_off", "grp_begin", "grp_end")
+
+
+def _dataset(kind: str, n: int = 6000, length: int = 64) -> np.ndarray:
+    if kind.startswith("skew"):
+        return clustered_series(n, length, n_clusters=6, seed=11)
+    return random_walks(n, length, seed=11)
+
+
+def _assert_same_layout(a: DumpyIndex, b: DumpyIndex) -> None:
+    np.testing.assert_array_equal(a.flat.order, b.flat.order)
+    np.testing.assert_array_equal(a.flat.leaf_offsets, b.flat.leaf_offsets)
+    np.testing.assert_array_equal(a.flat.leaf_sym, b.flat.leaf_sym)
+    np.testing.assert_array_equal(a.flat.leaf_card, b.flat.leaf_card)
+    ra, rb = a.routing_flat, b.routing_flat
+    for f in ROUTING_FIELDS:
+        np.testing.assert_array_equal(getattr(ra, f), getattr(rb, f), err_msg=f)
+    assert (a.stats.n_nodes, a.stats.n_leaves, a.stats.height,
+            a.stats.n_duplicates) == (b.stats.n_nodes, b.stats.n_leaves,
+                                      b.stats.height, b.stats.n_duplicates)
+
+
+# -- host vs device backend parity -------------------------------------------
+
+@pytest.mark.parametrize("kind,fuzzy", [("rand", 0.0), ("skew", 0.0),
+                                        ("rand_fuzzy", 0.15),
+                                        ("skew_fuzzy", 0.15)])
+def test_backend_layout_parity(kind, fuzzy):
+    db = _dataset(kind)
+    params = DumpyParams(sax=SaxParams(w=8, b=8), split=SplitParams(th=128),
+                         fuzzy_f=fuzzy, max_replica=3)
+    host = DumpyIndex.build(db, params)
+    dev = DumpyIndex.build(db, params, backend="device")
+    _assert_same_layout(host, dev)
+
+
+def test_backend_parity_tiny_collection():
+    """n <= th: both backends produce the single root leaf."""
+    db = random_walks(50, 64, seed=4)
+    host = DumpyIndex.build(db, PARAMS)
+    dev = DumpyIndex.build(db, PARAMS, backend="device")
+    _assert_same_layout(host, dev)
+    assert dev.flat.n_leaves == 1
+    np.testing.assert_array_equal(dev.flat.order, np.arange(50))
+
+
+def test_device_backend_db_ordered_matches_device_copy():
+    """The device-resident ordered collection is the ordered host db."""
+    db = _dataset("rand", 3000)
+    dev = DumpyIndex.build(db, PARAMS, backend="device")
+    assert dev._db_ordered_dev is not None
+    np.testing.assert_allclose(np.asarray(dev._db_ordered_dev),
+                               db[dev.flat.order], rtol=0, atol=0)
+
+
+def test_device_index_from_device_build_matches_host_path():
+    """DeviceIndex assembled from the device-resident rows equals the one
+    assembled via the host db_ordered round-trip."""
+    db = _dataset("rand", 3000)
+    dev = DumpyIndex.build(db, PARAMS, backend="device")
+    from repro.core.device_index import DeviceIndex
+    via_device = dev.device_index(chunk=512)
+    via_host = DeviceIndex.from_index(dev, chunk=512)
+    np.testing.assert_array_equal(np.asarray(via_device.db),
+                                  np.asarray(via_host.db))
+    np.testing.assert_array_equal(np.asarray(via_device.ids),
+                                  np.asarray(via_host.ids))
+    np.testing.assert_array_equal(np.asarray(via_device.leaf_start),
+                                  np.asarray(via_host.leaf_start))
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(ValueError):
+        DumpyIndex.build(random_walks(10, 64), PARAMS, backend="gpu")
+
+
+# -- staged split components --------------------------------------------------
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 5), st.integers(40, 200))
+@settings(max_examples=25, deadline=None)
+def test_plan_split_matches_brute_force(seed, m, c_n):
+    """The grouped evaluator picks a plan scoring within fp tolerance of the
+    exhaustive optimum (ties may break differently; scores must match)."""
+    rng = np.random.default_rng(seed)
+    b = 8
+    split = SplitParams(th=64)
+    words = rng.integers(0, 1 << 4, (c_n, m)).astype(np.int64)
+    counts = rng.integers(1, 8, c_n).astype(np.int64)
+    card = np.full(m, 4, np.int64)
+    avail = list(range(m))
+    total = int(counts.sum())
+    seg_vars = weighted_segment_variances(words, counts, b)
+    from repro.core.sax import next_bits_np, pack_bits_np
+    codes = pack_bits_np(next_bits_np(words, card, b))
+    got, _ = plan_split(codes, counts, seg_vars, avail, total, split)
+    # reference: expand multiplicities to rows and use the exhaustive search
+    rows = np.repeat(words, counts, axis=0)
+    hist = np.bincount(pack_bits_np(next_bits_np(rows, card, b)),
+                       minlength=1 << m).astype(np.int64)
+    sv_rows = segment_variances(rows, b)
+    ref = brute_force_split_plan(hist, sv_rows, avail, total, split)
+
+    from repro.core.split import _marginalize, objective
+
+    def score(plan):
+        sub = _marginalize(hist, m, tuple(plan))   # avail == range(m)
+        return objective(sub, float(sv_rows[list(plan)].sum()), len(plan),
+                         split.th, split.alpha)
+
+    assert abs(score(got) - score(ref)) < 1e-9
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 6), st.integers(10, 100))
+@settings(max_examples=25, deadline=None)
+def test_weighted_segment_variances_match_rowwise(seed, m, c_n):
+    rng = np.random.default_rng(seed)
+    words = rng.integers(0, 256, (c_n, m)).astype(np.int64)
+    counts = rng.integers(1, 6, c_n).astype(np.int64)
+    rows = np.repeat(words, counts, axis=0)
+    np.testing.assert_allclose(weighted_segment_variances(words, counts, 8),
+                               segment_variances(rows, 8), rtol=1e-12)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6), st.integers(1, 30))
+@settings(max_examples=30, deadline=None)
+def test_children_isax_matches_scalar(seed, lam, k):
+    rng = np.random.default_rng(seed)
+    w = 8
+    sym = rng.integers(0, 4, w).astype(np.int64)
+    card = rng.integers(0, 3, w).astype(np.int64)
+    csl = tuple(sorted(rng.choice(w, lam, replace=False).tolist()))
+    sids = rng.integers(0, 1 << lam, k).astype(np.int64)
+    syms, cards = children_isax(sym, card, csl, sids)
+    for i, sid in enumerate(sids):
+        s_ref, c_ref = child_isax(sym, card, csl, int(sid))
+        np.testing.assert_array_equal(syms[i], s_ref)
+        np.testing.assert_array_equal(cards[i], c_ref)
+
+
+def test_partition_by_sid_stable_ascending():
+    sids = np.array([3, 1, 3, 0, 1, 3])
+    groups = partition_by_sid(sids)
+    assert list(groups) == [0, 1, 3]
+    np.testing.assert_array_equal(groups[3], [0, 2, 5])
+    np.testing.assert_array_equal(groups[1], [1, 4])
+
+
+# -- batch insert / scoped resplit --------------------------------------------
+
+def test_insert_many_matches_sequential_inserts():
+    db = random_walks(2000, 64, seed=5)
+    extra = random_walks(300, 64, seed=6)
+    a = DumpyIndex.build(db, PARAMS)
+    b_ = DumpyIndex.build(db, PARAMS)
+    ids_a = [a.insert(x) for x in extra]
+    ids_b = b_.insert_many(extra)
+    np.testing.assert_array_equal(ids_a, ids_b)
+    # both layouts cover every series exactly (trees may differ: sequential
+    # ingest resplits mid-stream, the batch path resplits once at the end)
+    for idx in (a, b_):
+        counts = np.bincount(idx.flat.order, minlength=len(db) + len(extra))
+        assert counts.min() >= 1
+    # both remain exact
+    from repro.core.baselines.brute import brute_force_knn
+    from repro.core.search import exact_search
+    full = np.concatenate([db, extra])
+    q = random_walks(1, 64, seed=99)[0]
+    gt, _ = brute_force_knn(full, q, 10)
+    for idx in (a, b_):
+        got, _, _ = exact_search(idx, q, 10)
+        np.testing.assert_array_equal(np.sort(got), np.sort(gt))
+
+
+def test_insert_many_single_layout_rebuild():
+    db = random_walks(2000, 64, seed=5)
+    idx = DumpyIndex.build(db, PARAMS)
+    idx.insert_many(random_walks(500, 64, seed=8))
+    assert idx._n_layout_builds == 0          # nothing materialized yet
+    _ = idx.flat                              # first access
+    _ = idx.db_ordered
+    assert idx._n_layout_builds == 1          # exactly one flatten for 500 inserts
+
+
+def test_resplit_budget_scoped_to_subtree():
+    """The resplit builder's fuzzy budget covers only the resplit members,
+    not the whole collection."""
+    captured = {}
+    orig = DumpyBuilder.split_subtree
+
+    def spy(self, node, ids, paa, sax, stats):
+        captured["budget_len"] = None
+        out = orig(self, node, ids, paa, sax, stats)
+        captured["budget_len"] = len(self._rep_budget)
+        captured["n_ids"] = len(ids)
+        return out
+
+    db = random_walks(4000, 64, seed=12)
+    params = DumpyParams(sax=SaxParams(w=8, b=8), split=SplitParams(th=128),
+                         fuzzy_f=0.1, max_replica=2)
+    idx = DumpyIndex.build(db, params)
+    DumpyBuilder.split_subtree = spy
+    try:
+        # keep inserting near one existing series until a leaf overflows
+        target = db[7]
+        for i in range(200):
+            idx.insert(target + 1e-4 * np.sin(np.arange(64) + i))
+            if "n_ids" in captured:
+                break
+    finally:
+        DumpyBuilder.split_subtree = orig
+    assert "n_ids" in captured, "no resplit triggered"
+    assert captured["budget_len"] == captured["n_ids"]
+    assert captured["n_ids"] < len(idx.db)
+    # index still consistent: every live id present in the layout
+    counts = np.bincount(idx.flat.order, minlength=len(idx.db))
+    assert counts.min() >= 1
+
+
+# -- persistence after update sequences ---------------------------------------
+
+@pytest.mark.parametrize("backend", ["host", "device"])
+def test_save_load_roundtrip_after_updates(tmp_path, backend):
+    db = random_walks(3000, 64, seed=21)
+    params = DumpyParams(sax=SaxParams(w=8, b=8), split=SplitParams(th=128),
+                         fuzzy_f=0.1, max_replica=2)
+    idx = DumpyIndex.build(db, params, backend=backend)
+    idx.insert_many(random_walks(400, 64, seed=22))
+    for sid in (3, 100, 2999, 3100):
+        idx.delete(sid)
+    # force enough clustered inserts to trigger at least one resplit
+    nearby = db[42] + 1e-3 * random_walks(200, 64, seed=23)
+    idx.insert_many(nearby)
+
+    path = str(tmp_path / "idx")
+    idx.save(path)
+    idx2 = DumpyIndex.load(path)
+    np.testing.assert_array_equal(idx2.db, idx.db)
+    np.testing.assert_array_equal(idx2.alive, idx.alive)
+    np.testing.assert_array_equal(idx2.flat.order, idx.flat.order)
+    np.testing.assert_array_equal(idx2.flat.leaf_offsets,
+                                  idx.flat.leaf_offsets)
+    np.testing.assert_array_equal(idx2.flat.leaf_sym, idx.flat.leaf_sym)
+    np.testing.assert_array_equal(idx2.flat.leaf_card, idx.flat.leaf_card)
+    # loaded index still answers exact queries over live series
+    from repro.core.baselines.brute import brute_force_knn
+    from repro.core.search import exact_search
+    q = random_walks(1, 64, seed=77)[0]
+    alive_ids = np.flatnonzero(idx.alive)
+    gt_ids, _ = brute_force_knn(idx.db[alive_ids], q, 5)
+    got, _, _ = exact_search(idx2, q, 5)
+    np.testing.assert_array_equal(np.sort(alive_ids[gt_ids]), np.sort(got))
