@@ -89,6 +89,10 @@ def _report_deltas(record: dict, prev: dict | None,
         keys += ["qps_dtw_exact_batch", "qps_dtw_topk_full",
                  "qps_dtw_topk_masked"]
         keys += [f"qps_dtw_extended_nbr{n}" for n in NBR_SWEEP]
+        # recall keys ride the same >10% warning machinery: exact recall
+        # must stay 1.0 and the extended operating curve must not sag
+        keys += ["recall_dtw_exact"]
+        keys += [f"recall_dtw_extended_nbr{n}" for n in NBR_SWEEP]
         for key in keys:
             if key not in old or not old[key] or key not in cur:
                 continue
@@ -135,7 +139,8 @@ def _run_dtw(record: dict, rows: list, batches: tuple, sweep: tuple,
         t_exact = _time(
             lambda: exact_search_device_batch(idx, qs, K, metric="dtw"),
             repeat=1)
-        ids_e, _, _ = exact_search_device_batch(idx, qs, K, metric="dtw")
+        ids_e, _, _, st = exact_search_device_batch(idx, qs, K, metric="dtw",
+                                                    return_stats=True)
         recall_e = float(np.mean(
             [len(gt[i] & set(ids_e[i][ids_e[i] >= 0].tolist())) / K
              for i in range(B)]))
@@ -145,11 +150,38 @@ def _run_dtw(record: dict, rows: list, batches: tuple, sweep: tuple,
         rec_b["dtw_masked_speedup"] = t_full / t_masked
         rec_b["qps_dtw_exact_batch"] = B / t_exact
         rec_b["recall_dtw_exact"] = recall_e
+        rec_b["dtw_cascade"] = st         # per-stage prune-rate counters
         rows.append((f"batch_search/dtw_topk_full/B{B}", B / t_full, "qps"))
         rows.append((f"batch_search/dtw_topk_masked/B{B}", B / t_masked,
                      f"qps;speedup={t_full / t_masked:.2f}x"))
         rows.append((f"batch_search/dtw_exact_batch/B{B}", B / t_exact,
                      f"qps;recall@{K}={recall_e:.3f}"))
+        dead = st["killed_lb_keogh"] + st["killed_lb_improved"] \
+            + st["dp_abandoned"]
+        rows.append((f"batch_search/dtw_cascade/B{B}",
+                     100.0 * dead / max(st["considered"], 1),
+                     "% lanes killed before/inside DP "
+                     f"(lbk={st['killed_lb_keogh']} "
+                     f"lbi={st['killed_lb_improved']} "
+                     f"dp_ab={st['dp_abandoned']} "
+                     f"survive={st['dp_survivors']})"))
+        if quick:
+            # cascade smoke (verify.sh --quick): the exact DTW path must be
+            # exact and every cascade stage must actually fire
+            assert recall_e == 1.0, f"DTW exact recall {recall_e} != 1.0"
+            assert st["considered"] > 0 and st["dp_survivors"] > 0, st
+            assert st["killed_lb_keogh"] + st["killed_lb_improved"] > 0, st
+        if B == max(batches) and not quick:
+            # candidate-ordering shoot-out (Metric.order): which strategy
+            # wins at serving batch — recorded so the default is auditable
+            from repro.core.metric import ORDERS
+            rec_b["dtw_order_qps"] = {}
+            for order in ORDERS:
+                t_o = _time(lambda: exact_search_device_batch(
+                    idx, qs, K, metric="dtw", order=order), repeat=1)
+                rec_b["dtw_order_qps"][order] = B / t_o
+                rows.append((f"batch_search/dtw_order/{order}/B{B}",
+                             B / t_o, "qps"))
         for nbr in sweep:
             t_ext = _time(lambda: extended_search_device_batch(
                 idx, qs, K, nbr=nbr, rerank=False, metric="dtw"), repeat=1)

@@ -3,8 +3,11 @@
 # followed by the seconds-scale benchmark smokes (--quick, no baseline
 # updates): the batched-search smoke (DeviceIndex serving paths end-to-end —
 # exact, approximate, the extended (Alg. 4) nbr sweep with recall@k, and the
-# DTW metric smoke) and the build smoke (host vs device backend with the
-# layout-parity check inline).
+# DTW metric smoke, which asserts the LB_Keogh → LB_Improved → band-DP
+# cascade fires at recall 1.0) and the build smoke (host vs device backend
+# with the layout-parity check inline).  The full (non-quick) bench extends
+# its >10% regression warnings to the DTW keys: qps_dtw_exact_batch,
+# qps_dtw_topk_masked, recall_dtw_exact and the extended-nbr recalls.
 # Usage: scripts/verify.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."

@@ -174,17 +174,19 @@ def lower_search_dtw(mesh, *, n_series: int = 1 << 22, length: int = 256,
                      w: int = 16, chunk: int | None = None,
                      n_leaves: int = 16384, k: int = 58, q_batch: int = 64,
                      band: int | None = None):
-    """Lower the sharded *DTW* exact search (envelope bounds + LB_Keogh
-    pre-filter + fused masked band DP) on ``mesh`` — the ``dumpy_search_dtw``
-    roofline cell.  The span chunk defaults to the DTW frontier-bounded
-    width (``search_device.DTW_CHUNK``), matching what
-    ``exact_search_device_batch(metric="dtw")`` serves with."""
+    """Lower the sharded *DTW* exact search (envelope bounds + the
+    LB_Keogh → LB_Improved cascade + fused masked band DP) on ``mesh`` —
+    the ``dumpy_search_dtw`` roofline cell.  DTW now shares the ED-width
+    layout (spans sub-block in-program, ``search_device.DTW_SUB``), so the
+    span chunk defaults to the same width the ED cell lowers with,
+    matching what ``exact_search_device_batch(metric="dtw")`` serves
+    with.  Lowers the ``"shared"``-order program (the lane-ordered
+    programs specialize on concrete shard shapes, not abstract meshes)."""
     from .metric import Metric, default_band
-    from .search_device import DTW_CHUNK
 
     return lower_search_sharded(
         mesh, n_series=n_series, length=length, w=w,
-        chunk=chunk if chunk is not None else DTW_CHUNK,
+        chunk=chunk if chunk is not None else 8192,
         n_leaves=n_leaves, k=k, q_batch=q_batch,
         metric=Metric("dtw",
                       band if band is not None else default_band(length)))

@@ -281,8 +281,11 @@ class DumpyIndex:
         self._db_ordered: np.ndarray | None = None
         self._db_ordered_dev = None            # device-resident copy, if any
         self._n_layout_builds = 0              # observability (tests)
-        # (chunk, n_shards) → (DeviceIndex, alive snapshot); invalidated by
-        # updates (insert rebuilds the layout; delete refreshes the mask)
+        self._n_device_builds = 0              # cache-miss DeviceIndex builds
+        # (chunk, n_shards, mesh) → (DeviceIndex, alive snapshot); keyed per
+        # layout so ED and DTW callers (or different shard counts) coexist
+        # instead of evicting each other; invalidated by updates (insert
+        # rebuilds the layout; delete refreshes the alive mask per entry)
         self._device_cache: dict = {}
 
     # -- construction --------------------------------------------------------
@@ -450,6 +453,7 @@ class DumpyIndex:
             db_device = None if self._dirty else self._db_ordered_dev
             dev = DeviceIndex.from_index(self, chunk=chunk, n_shards=n_shards,
                                          db_device=db_device)
+            self._n_device_builds += 1
             if mesh is not None:
                 dev = dev.shard(mesh)
             self._device_cache[key] = (dev, self.alive.copy())

@@ -153,6 +153,35 @@ def dtw_np(a: np.ndarray, b_: np.ndarray, r: int) -> float:
     return float(np.sqrt(prev[m]))
 
 
+def dtw_np_batch(qs: np.ndarray, cand: np.ndarray, r: int) -> np.ndarray:
+    """:func:`dtw_np` vectorized over a per-query candidate set:
+    ``qs [Q, n]``, ``cand [Q, kk, n]`` → ``[Q, kk]`` float64.
+
+    Bitwise-identical per lane to the scalar reference (the DP recurrence is
+    elementwise per lane and the i/j visit order is the same — numpy f64
+    min/add are IEEE-exact), but the Python loop runs ``n·band`` times total
+    instead of per candidate, which is what keeps the k-sized DTW host
+    re-rank of the device search out of the profile (it used to cost more
+    than a quarter of the batch-64 exact search)."""
+    Q, kk, n = cand.shape
+    # keep the input dtype: the scalar reference squares the difference in
+    # the caller's f32 before the f64 DP add — promoting first drifts 1 ulp
+    a = np.repeat(np.asarray(qs), kk, axis=0)                # [Q*kk, n]
+    b_ = np.asarray(cand).reshape(Q * kk, n)
+    INF = np.inf
+    prev = np.full((Q * kk, n + 1), INF)
+    prev[:, 0] = 0.0
+    for i in range(1, n + 1):
+        cur = np.full((Q * kk, n + 1), INF)
+        j_lo, j_hi = max(1, i - r), min(n, i + r)
+        for j in range(j_lo, j_hi + 1):
+            c = (a[:, i - 1] - b_[:, j - 1]) ** 2
+            cur[:, j] = c + np.minimum(
+                np.minimum(prev[:, j], prev[:, j - 1]), cur[:, j - 1])
+        prev = cur
+    return np.sqrt(prev[:, n]).reshape(Q, kk)
+
+
 def _dtw_scan(q: jax.Array, xs: jax.Array, r: int) -> jax.Array:
     """Banded DTW DP of one query vs a candidate batch (traceable body shared
     by the single-query and query-batched wrappers)."""
@@ -249,6 +278,62 @@ def lb_keogh_batch_jnp(xs: jax.Array, U: jax.Array, L: jax.Array) -> jax.Array:
     """LB_Keogh of every candidate against every query envelope:
     ``xs [m, n]``, ``U/L [Q, n]`` → ``[Q, m]`` (sqrt of the squared core)."""
     return jnp.sqrt(lb_keogh2_batch_jnp(xs, U, L))
+
+
+def _window_max(x: jax.Array, r: int) -> jax.Array:
+    """Sliding-window max over the last axis (window ``[i-r, i+r]``,
+    edge-clamped) via van Herk/Gil–Werman: block prefix/suffix running
+    maxes at block width ``2r+1``, then one max of two gathers — ~5 passes
+    over the data whatever the band, where a naive ``reduce_window``
+    lowers to ``2r+1`` passes on CPU.  Exact (not an approximation)."""
+    n = x.shape[-1]
+    if r <= 0:
+        return x
+    w = 2 * r + 1
+    nb = -(-(n + r) // w)           # blocks must cover index n-1+r
+    pad = jnp.full(x.shape[:-1] + (nb * w - n,), -jnp.inf, x.dtype)
+    blocks = jnp.concatenate([x, pad], axis=-1) \
+        .reshape(x.shape[:-1] + (nb, w))
+    ax = blocks.ndim - 1                  # cummax rejects negative axes
+    run = jax.lax.cummax(blocks, axis=ax) \
+        .reshape(x.shape[:-1] + (nb * w,))                 # prefix per block
+    suf = jnp.flip(jax.lax.cummax(jnp.flip(blocks, -1), axis=ax), -1) \
+        .reshape(x.shape[:-1] + (nb * w,))                 # suffix per block
+    lead = jnp.full(x.shape[:-1] + (r,), -jnp.inf, x.dtype)
+    s_l = jnp.concatenate([lead, suf], axis=-1)[..., :n]   # suf[i - r]
+    r_e = run[..., r:r + n]                                # run[i + r]
+    return jnp.maximum(s_l, r_e)
+
+
+def _window_min(x: jax.Array, r: int) -> jax.Array:
+    """Sliding-window min over the last axis (same contract as
+    :func:`_window_max`)."""
+    return -_window_max(-x, r)
+
+
+def lb_improved2_batch_jnp(xs: jax.Array, qs: jax.Array, U: jax.Array,
+                           L: jax.Array, r: int) -> jax.Array:
+    """Squared LB_Improved (Lemire 2009): the two-pass envelope bound
+    ``LB_Keogh(x, env(q))² + LB_Keogh(q, env(h))²`` with ``h = clip(x, L, U)``
+    the projection of the candidate onto the query envelope.
+
+    ``xs [m, n]`` (shared block) or ``[Q, m, n]`` (per-query gather layout),
+    ``qs [Q, n]``, ``U/L [Q, n]`` → ``[Q, m]`` squared bounds.  Dominates
+    LB_Keogh (the first term *is* LB_Keogh and the second is ≥ 0) and still
+    lower-bounds banded DTW² — both property-tested against ``dtw_np`` in
+    ``tests/test_dtw_cascade.py``.  This is the second stage of the DTW
+    candidate cascade (LB_Keogh → LB_Improved → band DP): the extra
+    elementwise pass is far cheaper than the O(n·band) DP it spares."""
+    xsb = xs if xs.ndim == 3 else xs[None, :, :]
+    above = jnp.maximum(xsb - U[:, None, :], 0.0)
+    below = jnp.maximum(L[:, None, :] - xsb, 0.0)
+    d1 = jnp.maximum(above, below)
+    h = jnp.clip(xsb, L[:, None, :], U[:, None, :])
+    Uh = _window_max(h, r)
+    Lh = _window_min(h, r)
+    d2 = jnp.maximum(jnp.maximum(qs[:, None, :] - Uh, 0.0),
+                     jnp.maximum(Lh - qs[:, None, :], 0.0))
+    return (d1 * d1).sum(-1) + (d2 * d2).sum(-1)
 
 
 def _dtw2_masked_scan_full(q: jax.Array, xs: jax.Array, r: int,

@@ -43,16 +43,36 @@ def default_band(n: int) -> int:
     return max(1, int(0.1 * n))
 
 
+#: Candidate-ordering strategies for the exact device search (DTW only —
+#: the ED program ignores the knob and stays byte-identical):
+#:
+#: - ``"shared"`` — the pre-existing span loop: blocks ordered by the
+#:   min-over-queries window LB, one while_loop shared by the whole batch.
+#: - ``"perq"``  — per-query candidate ordering: every query sorts *lanes*
+#:   by its own LB_Improved and walks its own gather-chunked frontier (one
+#:   shared while_loop, but each query's chunks are its personal best-first
+#:   prefix, so the early-exit fires per the straggler's true need).
+#: - ``"cluster"`` — ``"perq"`` plus LB-quantile query clustering: queries
+#:   are grouped by estimated surviving-lane count into sub-batches, each
+#:   with its own while_loop, so light queries stop paying for heavy ones.
+ORDERS = ("shared", "perq", "cluster")
+
+
 @dataclasses.dataclass(frozen=True)
 class Metric:
-    """A search metric: ``name`` ∈ {"ed", "dtw"} and the DTW band (ignored
-    for ED).  Hashable → usable as a jit static argument."""
+    """A search metric: ``name`` ∈ {"ed", "dtw"}, the DTW band (ignored for
+    ED), and the exact-search candidate-ordering strategy ``order`` (one of
+    :data:`ORDERS`; only the DTW device program reads it).  Hashable →
+    usable as a jit static argument."""
     name: str = "ed"
     band: int = 0
+    order: str = "shared"
 
     def __post_init__(self):
         if self.name not in ("ed", "dtw"):
             raise ValueError(f"unknown metric {self.name!r}")
+        if self.order not in ORDERS:
+            raise ValueError(f"unknown order {self.order!r} (one of {ORDERS})")
 
     @property
     def is_dtw(self) -> bool:
@@ -61,16 +81,29 @@ class Metric:
 
 ED = Metric("ed", 0)
 
+#: Default ordering for DTW exact device search.  ``"cluster"`` won the
+#: committed bench shoot-out (see ``BENCH_batch_search.json``
+#: ``dtw_order_qps``): per-query LB_Improved ordering alone already beats
+#: the shared span loop at batch 64, and quantile clustering keeps light
+#: queries from idling behind stragglers in the shared while_loop.
+DTW_DEFAULT_ORDER = "cluster"
 
-def resolve(metric, n: int, band: int | None = None) -> Metric:
+
+def resolve(metric, n: int, band: int | None = None,
+            order: str | None = None) -> Metric:
     """Normalize a user-facing ``metric`` (string or Metric) + optional
-    ``band`` override into a concrete :class:`Metric` for series length
-    ``n`` (DTW band defaults to the host searches' ``0.1 n``)."""
+    ``band`` / ``order`` overrides into a concrete :class:`Metric` for
+    series length ``n`` (DTW band defaults to the host searches' ``0.1 n``;
+    DTW order defaults to :data:`DTW_DEFAULT_ORDER`)."""
     if isinstance(metric, Metric):
+        if order is not None and order != metric.order:
+            return dataclasses.replace(metric, order=order)
         return metric
     if metric == "ed":
-        return ED
-    return Metric("dtw", int(band) if band is not None else default_band(n))
+        return ED if order is None else dataclasses.replace(ED, order=order)
+    return Metric("dtw",
+                  int(band) if band is not None else default_band(n),
+                  order if order is not None else DTW_DEFAULT_ORDER)
 
 
 # ---------------------------------------------------------------------------

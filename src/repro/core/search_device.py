@@ -50,10 +50,29 @@ Every path is *metric-pluggable* (``core.metric``): the query preprocessing
 produces a per-segment interval (ED: the PAA itself; DTW: the LB_Keogh
 envelope summary) feeding one interval-MINDIST bound everywhere a region is
 ranked, and the candidate distance is either the MXU ED form or the fused
-masked banded-DTW DP (``ops.dtw_band``) where LB_Keogh-pruned candidates
-skip the DP and the running top-k cutoff is threaded through the scan.  The
+masked banded-DTW DP (``ops.dtw_band``) behind the LB_Keogh → LB_Improved
+cascade, with the running top-k cutoff threaded through the scan.  The
 ``Metric`` struct is a jit static argument, so the ED programs lower exactly
 as before and DTW specializes separately.
+
+The DTW exact path ("DTW fast path", docs/device_index.md):
+
+- **one layout** — DTW shares the ED-width ``chunk`` layout; the span body
+  sub-blocks each slab with a ``fori_loop`` over ``DTW_SUB``-wide sub-slabs
+  (bounding the DP-frontier memory the old narrow ``DTW_CHUNK`` layout
+  existed for) and re-reads the running cutoff between sub-blocks, so later
+  sub-blocks inherit the pruning the earlier ones just earned;
+- **cascade** — LB_Keogh, then LB_Improved (second-pass envelope of the
+  LB_Keogh projection), then the band DP; each stage masks the next, so
+  only cascade survivors pay O(n·band), and per-stage kill counters are
+  threaded out for observability;
+- **per-query ordering** (``Metric.order``) — instead of the shared
+  min-over-queries span order, the ``"perq"``/``"cluster"`` program sorts
+  every query's *lanes* by its own LB_Improved and walks gather-chunks of
+  that personal best-first order (seeding the cutoff with a DP over the
+  first ``kk`` candidates); ``"cluster"`` additionally groups queries by
+  estimated surviving-lane count into sub-batches with independent
+  while_loops so light queries stop idling behind stragglers.
 """
 from __future__ import annotations
 
@@ -65,15 +84,22 @@ import jax.numpy as jnp
 
 from .device_index import DeviceIndex
 from .index import DumpyIndex
-from .lb import dtw_np, ed2_batch_jnp, lb_keogh2_batch_jnp
+from .lb import (dtw2_masked_gather_jnp, dtw_np_batch, ed2_batch_jnp,
+                 lb_improved2_batch_jnp, lb_keogh2_batch_jnp)
 from .metric import ED, Metric, query_prep_jnp, resolve
 from .sax import sax_encode_jnp
 from repro.kernels import ops
 
-# DTW span width: the anti-diagonal DP carries two [Q, chunk, n] frontiers,
-# so the exact-path spans stay small (256·64·256·4B·2 ≈ 32 MB at B=64) —
-# the ED chunk would be ~0.5 GB of DP state per span
-DTW_CHUNK = 256
+# DTW sub-block width inside a span slab: the anti-diagonal DP carries two
+# [Q, sub, band+1] frontiers, so sub-blocking the ED-width slab keeps the
+# DP state small (≈ 256·(band+1)·Q·4B·2 per sub-block) without a second,
+# narrower DeviceIndex layout
+DTW_SUB = 256
+# gather-chunk width of the per-query lane-ordered programs
+DTW_LANE_CHUNK = 128
+# lane-chunk width of the LB_Improved table precompute (bounds the
+# [Q, chunk, n] envelope temporaries)
+DTW_LB_CHUNK = 2048
 
 
 # ---------------------------------------------------------------------------
@@ -94,23 +120,51 @@ def _prep_batch(metric: Metric, qs_dev: jax.Array, w: int, b: int
     return query_prep_jnp(metric, qs_dev, paa_q), sax_q.astype(jnp.int32)
 
 
+#: slots of the per-stage cascade counter vector (i32[4]) the DTW programs
+#: thread through their loops; ``dp_survivors = considered - killed_lb_keogh
+#: - killed_lb_improved - dp_abandoned`` is derived at the end.
+STAT_KEYS = ("considered", "killed_lb_keogh", "killed_lb_improved",
+             "dp_abandoned")
+
+
+def _cascade_stats(valid: jax.Array, lbk2: jax.Array, lbi2: jax.Array,
+                   d2: jax.Array, cutoff2: jax.Array) -> jax.Array:
+    """Per-stage kill counters of one cascade invocation → i32[4]
+    (:data:`STAT_KEYS` order).  ``valid`` are the lanes the cascade looked
+    at; a lane that ran the DP but came back ``+inf`` was cutoff-abandoned
+    mid-DP."""
+    ct = cutoff2[:, None]
+    k1 = valid & (lbk2 >= ct)
+    k2 = valid & (lbk2 < ct) & (lbi2 >= ct)
+    ran = valid & (lbi2 < ct)
+    ab = ran & jnp.isinf(d2)
+    return jnp.stack([valid.sum(), k1.sum(), k2.sum(), ab.sum()]) \
+        .astype(jnp.int32)
+
+
 def _dist2_slab(metric: Metric, qs: jax.Array, prep: tuple, slab: jax.Array,
-                valid: jax.Array, cutoff2: jax.Array) -> jax.Array:
+                valid: jax.Array, cutoff2: jax.Array
+                ) -> tuple[jax.Array, jax.Array]:
     """Squared candidate distances of the whole query batch against a shared
-    candidate slab, with invalid/pruned entries as ``+inf``.
+    candidate slab, with invalid/pruned entries as ``+inf``.  Returns
+    ``(d2 [Q, m], stats i32[4])`` (stats all-zero for ED, where XLA
+    dead-code-eliminates them).
 
     ``valid [Q, m]`` marks live candidates; ``cutoff2 [Q]`` is the running
     squared k-th best.  ED pays the MXU form for every candidate (the span
-    loop already pruned at span granularity); DTW first prunes candidates
-    whose squared LB_Keogh reaches the cutoff, then runs the fused masked
-    band DP — pruned candidates skip the DP entirely."""
+    loop already pruned at span granularity); DTW runs the lower-bound
+    cascade — LB_Keogh, then the strictly tighter LB_Improved — and only
+    lanes both stages leave below the cutoff pay the fused masked band
+    DP."""
     if not metric.is_dtw:
         d2 = ed2_batch_jnp(qs, slab)
-        return jnp.where(valid, d2, jnp.inf)
+        return jnp.where(valid, d2, jnp.inf), jnp.zeros(4, jnp.int32)
     _, _, env_lo, env_hi = prep
     lbk2 = lb_keogh2_batch_jnp(slab, env_hi, env_lo)          # [Q, m]
-    mask = valid & (lbk2 < cutoff2[:, None])
-    return ops.dtw_band(qs, slab, mask, cutoff2, metric.band)
+    lbi2 = lb_improved2_batch_jnp(slab, qs, env_hi, env_lo, metric.band)
+    mask = valid & (lbk2 < cutoff2[:, None]) & (lbi2 < cutoff2[:, None])
+    d2 = ops.dtw_band(qs, slab, mask, cutoff2, metric.band)
+    return d2, _cascade_stats(valid, lbk2, lbi2, d2, cutoff2)
 
 
 def _dist2_gather(metric: Metric, qs: jax.Array, prep: tuple,
@@ -118,14 +172,17 @@ def _dist2_gather(metric: Metric, qs: jax.Array, prep: tuple,
                   ) -> jax.Array:
     """As :func:`_dist2_slab` but with *per-query* candidate sets
     ``cand [Q, m, n]`` (the leaf-gather layout of the approximate/extended
-    scans)."""
+    scans); returns just ``d2`` — the gather callers don't thread
+    counters.  Masking a lane whose LB reaches the cutoff never changes a
+    merge result (it could not displace any held slot), so the extra
+    LB_Improved stage is result-invariant here too."""
     if not metric.is_dtw:
         d2 = ((cand - qs[:, None, :]) ** 2).sum(-1)
         return jnp.where(valid, d2, jnp.inf)
-    from .lb import dtw2_masked_gather_jnp
     _, _, env_lo, env_hi = prep
     lbk2 = lb_keogh2_batch_jnp(cand, env_hi, env_lo)
-    mask = valid & (lbk2 < cutoff2[:, None])
+    lbi2 = lb_improved2_batch_jnp(cand, qs, env_hi, env_lo, metric.band)
+    mask = valid & (lbk2 < cutoff2[:, None]) & (lbi2 < cutoff2[:, None])
     return dtw2_masked_gather_jnp(qs, cand, metric.band, mask, cutoff2)
 
 
@@ -169,22 +226,33 @@ def _dedup_topk(d2: jax.Array, ids: jax.Array, k: int
 @functools.partial(jax.jit, static_argnames=("k", "metric"))
 def _exact_knn_sharded(dev: DeviceIndex, prep: tuple, qs: jax.Array, *,
                        k: int, metric: Metric = ED
-                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
+                       ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Interval-MINDIST tables → per-shard span loops (vmapped) →
     all-gather merge with in-merge dedup.  Returns ``(d [Q,k], original ids
-    [Q,k], spans_visited [Q])`` with invalid slots as ``inf / -1``.
+    [Q,k], spans_visited [Q], cascade stats i32[4])`` with invalid slots as
+    ``inf / -1`` (stats are all-zero for ED).
 
     Early termination is per query *and* per shard: along the shard's span
     order, query q may stop merging at step i iff its suffix-min LB there is
     ≥ its running kth best — every span it has not seen locally is
     individually prunable.  The loop is metric-generic: the leaf/span bound
     is the metric's interval MINDIST and the slab distance is
-    :func:`_dist2_slab` (for DTW the running cutoff threads into the fused
-    masked band DP, so LB_Keogh-pruned candidates skip the DP)."""
+    :func:`_dist2_slab` (the DTW LB cascade + fused masked band DP).
+
+    DTW runs on the same ED-width layout: the span body sub-blocks the slab
+    with an inner ``fori_loop`` over ``DTW_SUB``-wide sub-slabs, which
+    bounds the DP-frontier memory without a second narrow ``DeviceIndex``,
+    and re-reads the running cutoff between sub-blocks so each sub-slab
+    prunes against everything earlier sub-slabs just merged."""
     Q = qs.shape[0]
     chunk = dev.chunk
     n = dev.n
     seg_lo, seg_hi = prep[0], prep[1]
+    # sub-blocking needs exact tiling; an odd explicit chunk (or one already
+    # at/below DTW_SUB) just runs the slab whole, as before
+    n_sub = chunk // DTW_SUB if (
+        metric.is_dtw and chunk > DTW_SUB and chunk % DTW_SUB == 0) else 1
+    sub_w = chunk // n_sub
 
     def per_shard(db_s, alive_s, ids_s, lo_s, hi_s,
                   w_start, w_lead, w_size, e_leaf, e_win):
@@ -202,33 +270,49 @@ def _exact_knn_sharded(dev: DeviceIndex, prep: tuple, qs: jax.Array, *,
             [suffix, jnp.full((Q, 1), jnp.inf, jnp.float32)], axis=1)
 
         def cond(carry):
-            i, topd, topi, vis = carry
+            i, topd, topi, vis, st = carry
             return (i < W) & jnp.any(suffix[:, i] < topd[:, k - 1])
 
         def body(carry):
-            i, topd, topi, vis = carry
+            i, topd, topi, vis, st = carry
             start = w_start[i]
-            slab = jax.lax.dynamic_slice(db_s, (start, 0), (chunk, n))
-            j = jnp.arange(chunk)
-            valid = (j >= w_lead[i]) & (j < w_lead[i] + w_size[i])
-            valid &= jax.lax.dynamic_slice(alive_s, (start,), (chunk,))
             qact = win_lb[:, i] < topd[:, k - 1]            # [Q] active mask
-            d2 = _dist2_slab(metric, qs, prep, slab,
-                             valid[None, :] & qact[:, None], topd[:, k - 1])
-            sid = jax.lax.dynamic_slice(ids_s, (start,), (chunk,))
-            idt = jnp.where(jnp.isinf(d2), -1,
-                            jnp.broadcast_to(sid[None, :], (Q, chunk)))
-            topd, topi = ops.topk_merge(topd, topi, d2, idt)
-            return i + 1, topd, topi, vis + qact.astype(jnp.int32)
+
+            def sub(b, c2):
+                topd, topi, st = c2
+                s0 = start + b * sub_w
+                slab = jax.lax.dynamic_slice(db_s, (s0, 0), (sub_w, n))
+                j = b * sub_w + jnp.arange(sub_w)           # slab-local rows
+                valid = (j >= w_lead[i]) & (j < w_lead[i] + w_size[i])
+                valid &= jax.lax.dynamic_slice(alive_s, (s0,), (sub_w,))
+                # cutoff re-read each sub-block: later sub-slabs prune
+                # against what earlier ones merged
+                qact_b = qact & (win_lb[:, i] < topd[:, k - 1])
+                d2, stt = _dist2_slab(metric, qs, prep, slab,
+                                      valid[None, :] & qact_b[:, None],
+                                      topd[:, k - 1])
+                sid = jax.lax.dynamic_slice(ids_s, (s0,), (sub_w,))
+                idt = jnp.where(jnp.isinf(d2), -1,
+                                jnp.broadcast_to(sid[None, :], (Q, sub_w)))
+                topd, topi = ops.topk_merge(topd, topi, d2, idt)
+                return topd, topi, st + stt
+
+            if n_sub == 1:
+                topd, topi, st = sub(0, (topd, topi, st))
+            else:
+                topd, topi, st = jax.lax.fori_loop(
+                    0, n_sub, sub, (topd, topi, st))
+            return i + 1, topd, topi, vis + qact.astype(jnp.int32), st
 
         init = (jnp.int32(0),
                 jnp.full((Q, k), jnp.inf, jnp.float32),
                 jnp.full((Q, k), -1, jnp.int32),
-                jnp.zeros((Q,), jnp.int32))
-        _, topd, topi, vis = jax.lax.while_loop(cond, body, init)
-        return topd, topi, vis
+                jnp.zeros((Q,), jnp.int32),
+                jnp.zeros(4, jnp.int32))
+        _, topd, topi, vis, st = jax.lax.while_loop(cond, body, init)
+        return topd, topi, vis, st
 
-    topd, topi, vis = jax.vmap(per_shard)(
+    topd, topi, vis, st = jax.vmap(per_shard)(
         dev.db, dev.alive, dev.ids, dev.leaf_lo, dev.leaf_hi,
         dev.win_start, dev.win_lead, dev.win_size,
         dev.edge_leaf, dev.edge_win)                        # [S, Q, k]
@@ -236,7 +320,160 @@ def _exact_knn_sharded(dev: DeviceIndex, prep: tuple, qs: jax.Array, *,
     alld = jnp.moveaxis(topd, 0, 1).reshape(Q, S * k)       # all-gather when
     alli = jnp.moveaxis(topi, 0, 1).reshape(Q, S * k)       # sharded over S
     d2m, idm = _dedup_topk(alld, alli, k)
-    return jnp.sqrt(d2m), idm, vis.sum(axis=0)
+    return jnp.sqrt(d2m), idm, vis.sum(axis=0), st.sum(axis=0)
+
+
+def _cluster_groups(Q: int) -> int:
+    """Static sub-batch count of the ``"cluster"`` ordering: enough groups
+    that stragglers stop holding the whole batch, few enough that each
+    group's while_loop still amortizes its gather dispatches."""
+    if Q % 4 == 0 and Q >= 32:
+        return 4
+    if Q % 2 == 0 and Q >= 16:
+        return 2
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
+def _exact_knn_lane_sharded(dev: DeviceIndex, prep: tuple, qs: jax.Array, *,
+                            k: int, metric: Metric
+                            ) -> tuple[jax.Array, jax.Array, jax.Array,
+                                       jax.Array]:
+    """The per-query-ordered DTW exact program (``Metric.order`` ∈
+    {"perq", "cluster"}): same contract as :func:`_exact_knn_sharded`
+    (``vis`` counts gather-chunks a query was live for, the analogue of
+    spans visited).
+
+    Per shard: (1) a lane-chunked precompute builds the full LB_Keogh and
+    LB_Improved tables ``[Q, Tp]``; (2) every query argsorts *its own* lanes
+    by LB_Improved; (3) a DP over each query's first ``k`` lanes seeds the
+    running top-k — the best cutoff any k candidates can buy; (4) a
+    while_loop walks ``DTW_LANE_CHUNK``-wide gather-chunks of the sorted
+    ranks, pruning each chunk against the re-read cutoff, until the
+    smallest remaining LB of every query reaches its cutoff.  Because each
+    query's lanes arrive ascending by LB, the suffix condition is just the
+    chunk's first column, and the visited prefix is exactly the candidate
+    superset the host proof needs: every unvisited lane has
+    ``LB_Improved ≥ cutoff ≥ final k-th best ≤ DTW``.
+
+    ``"cluster"`` additionally argsorts queries by estimated surviving-lane
+    count (``#{lanes: LB_Improved < seed cutoff}``) and runs one while_loop
+    per contiguous sub-batch: a query's own merge sequence is unchanged
+    (extra iterations of a shared loop merge nothing once it is inactive),
+    so the results are bitwise those of ``"perq"`` — only the wasted
+    gather dispatches of light queries go away."""
+    Q, n = qs.shape
+    r = metric.band
+    _, _, env_lo, env_hi = prep
+    G = _cluster_groups(Q) if metric.order == "cluster" else 1
+
+    def per_shard(db_s, alive_s, ids_s):
+        Tp = db_s.shape[0]
+        if Tp == 0:                                          # empty shard
+            return (jnp.full((Q, k), jnp.inf, jnp.float32),
+                    jnp.full((Q, k), -1, jnp.int32),
+                    jnp.zeros((Q,), jnp.int32), jnp.zeros(4, jnp.int32))
+        C = min(DTW_LANE_CHUNK, Tp)
+        LC = min(DTW_LB_CHUNK, Tp)
+        kseed = min(k, Tp)
+
+        # ---- stage 1: LB tables over every lane (chunked precompute) ----
+        def lb_chunk(c, tabs):
+            lbk_t, lbi_t = tabs
+            s0 = jnp.minimum(c * LC, Tp - LC)   # tail chunk recomputes a few
+            slab = jax.lax.dynamic_slice(db_s, (s0, 0), (LC, n))
+            al = jax.lax.dynamic_slice(alive_s, (s0,), (LC,))
+            lbk2 = lb_keogh2_batch_jnp(slab, env_hi, env_lo)
+            lbi2 = lb_improved2_batch_jnp(slab, qs, env_hi, env_lo, r)
+            lbk2 = jnp.where(al[None, :], lbk2, jnp.inf)
+            lbi2 = jnp.where(al[None, :], lbi2, jnp.inf)
+            return (jax.lax.dynamic_update_slice(lbk_t, lbk2, (0, s0)),
+                    jax.lax.dynamic_update_slice(lbi_t, lbi2, (0, s0)))
+
+        init_t = (jnp.zeros((Q, Tp), jnp.float32),
+                  jnp.zeros((Q, Tp), jnp.float32))
+        lbk_all, lbi_all = jax.lax.fori_loop(0, -(-Tp // LC), lb_chunk,
+                                             init_t)
+
+        # ---- stage 2: per-query lane order, ascending LB_Improved ----
+        order = jnp.argsort(lbi_all, axis=1)                 # [Q, Tp]
+        lbi_s = jnp.take_along_axis(lbi_all, order, 1)
+        lbk_s = jnp.take_along_axis(lbk_all, order, 1)
+
+        # ---- stage 3: seed DP over each query's k best-LB lanes ----
+        seed_idx = order[:, :kseed]
+        seed_ok = jnp.isfinite(lbi_s[:, :kseed])             # dead lanes: inf
+        d2s = dtw2_masked_gather_jnp(qs, db_s[seed_idx], r, seed_ok,
+                                     jnp.full((Q,), jnp.inf, jnp.float32))
+        idt = jnp.where(jnp.isinf(d2s), -1, ids_s[seed_idx])
+        topd, topi = ops.topk_merge(jnp.full((Q, k), jnp.inf, jnp.float32),
+                                    jnp.full((Q, k), -1, jnp.int32),
+                                    d2s, idt)
+        st = jnp.stack([seed_ok.sum(), 0, 0,
+                        (seed_ok & jnp.isinf(d2s)).sum()]).astype(jnp.int32)
+
+        # ---- stage 4: gather-chunk walk of the sorted ranks ----
+        NC = max(-(-(Tp - kseed) // C), 0)
+
+        def walk(qs_g, order_g, lbi_g, lbk_g, topd_g, topi_g):
+            Qg = qs_g.shape[0]
+
+            def cond(carry):
+                c, topd, topi, vis, st = carry
+                r0 = jnp.minimum(kseed + c * C, Tp - 1)
+                front = jax.lax.dynamic_slice(lbi_g, (0, r0), (Qg, 1))[:, 0]
+                return (c < NC) & jnp.any(front < topd[:, k - 1])
+
+            def body(carry):
+                c, topd, topi, vis, st = carry
+                r0 = kseed + c * C
+                s = jnp.minimum(r0, Tp - C)
+                fresh = jnp.arange(C) >= (r0 - s)   # ranks < r0 already seen
+                idx = jax.lax.dynamic_slice(order_g, (0, s), (Qg, C))
+                lbi_c = jax.lax.dynamic_slice(lbi_g, (0, s), (Qg, C))
+                lbk_c = jax.lax.dynamic_slice(lbk_g, (0, s), (Qg, C))
+                cutoff = topd[:, k - 1]
+                seen = fresh[None, :] & jnp.isfinite(lbi_c)
+                mask = seen & (lbi_c < cutoff[:, None])
+                cand = db_s[idx]                             # [Qg, C, n]
+                d2 = dtw2_masked_gather_jnp(qs_g, cand, r, mask, cutoff)
+                idt = jnp.where(jnp.isinf(d2), -1, ids_s[idx])
+                topd, topi = ops.topk_merge(topd, topi, d2, idt)
+                st = st + _cascade_stats(seen, lbk_c, lbi_c, d2, cutoff)
+                return (c + 1, topd, topi,
+                        vis + mask.any(axis=1).astype(jnp.int32), st)
+
+            init = (jnp.int32(0), topd_g, topi_g,
+                    jnp.ones((Qg,), jnp.int32),   # the seed chunk counts
+                    jnp.zeros(4, jnp.int32))
+            _, topd_g, topi_g, vis, stw = jax.lax.while_loop(cond, body, init)
+            return topd_g, topi_g, vis, stw
+
+        if G == 1:
+            topd, topi, vis, stw = walk(qs, order, lbi_s, lbk_s, topd, topi)
+            return topd, topi, vis, st + stw
+        # cluster: group queries by estimated work at the seed cutoff
+        est = (lbi_all < topd[:, k - 1][:, None]).sum(axis=1)
+        perm = jnp.argsort(est)
+        inv = jnp.argsort(perm)
+        Qg = Q // G
+        parts = []
+        for g in range(G):
+            rows = perm[g * Qg:(g + 1) * Qg]
+            parts.append(walk(qs[rows], order[rows], lbi_s[rows],
+                              lbk_s[rows], topd[rows], topi[rows]))
+        topd = jnp.concatenate([p[0] for p in parts])[inv]
+        topi = jnp.concatenate([p[1] for p in parts])[inv]
+        vis = jnp.concatenate([p[2] for p in parts])[inv]
+        stw = sum(p[3] for p in parts)
+        return topd, topi, vis, st + stw
+
+    topd, topi, vis, st = jax.vmap(per_shard)(dev.db, dev.alive, dev.ids)
+    S = topd.shape[0]
+    alld = jnp.moveaxis(topd, 0, 1).reshape(Q, S * k)
+    alli = jnp.moveaxis(topi, 0, 1).reshape(Q, S * k)
+    d2m, idm = _dedup_topk(alld, alli, k)
+    return jnp.sqrt(d2m), idm, vis.sum(axis=0), st.sum(axis=0)
 
 
 def _finalize_exact(index: DumpyIndex, qs: np.ndarray, ids_dev: np.ndarray,
@@ -254,11 +491,9 @@ def _finalize_exact(index: DumpyIndex, qs: np.ndarray, ids_dev: np.ndarray,
                 np.full((Q, k), np.inf, np.float32))
     cand = index.db[np.maximum(ids_dev, 0)]                 # [Q, kk, n]
     if metric.is_dtw:
-        d = np.full((Q, kk), np.inf)                        # f64: heap order
-        for qi in range(Q):
-            for j in range(kk):
-                if ids_dev[qi, j] >= 0:
-                    d[qi, j] = dtw_np(qs[qi], cand[qi, j], metric.band)
+        # f64 vectorized DP, bitwise the scalar dtw_np per lane: heap order
+        d = dtw_np_batch(qs, cand, metric.band)
+        d = np.where(ids_dev < 0, np.inf, d)
     else:
         diff = cand - qs[:, None, :]
         d = np.sqrt((diff * diff).sum(axis=-1)).astype(np.float32)
@@ -285,8 +520,9 @@ def exact_search_device_batch(index: DumpyIndex, qs: np.ndarray, k: int,
                               chunk: int = 2048, mesh=None,
                               dev: DeviceIndex | None = None,
                               metric: str | Metric = "ed",
-                              band: int | None = None
-                              ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+                              band: int | None = None,
+                              order: str | None = None,
+                              return_stats: bool = False):
     """Batched exact kNN: ``qs [Q, n]`` → ``(ids [Q, k], d [Q, k],
     spans_visited [Q])``.  Results match ``search.exact_search`` at the same
     ``metric``/``band`` per query (fuzzy duplicates deduplicated on device,
@@ -295,13 +531,15 @@ def exact_search_device_batch(index: DumpyIndex, qs: np.ndarray, k: int,
 
     With ``mesh`` (or a pre-sharded ``dev``), the span loop runs shard-local
     over the data axis and the per-shard top-k merges through an all-gather —
-    bitwise-identical to the single-device result.  ``metric="dtw"`` runs
-    the same program with the envelope bounds and the fused masked band DP
-    (narrower ``DTW_CHUNK`` spans bound the DP frontier memory)."""
+    bitwise-identical to the single-device result.  ``metric="dtw"`` shares
+    the same (ED-width) device layout — spans are sub-blocked in-program to
+    bound the DP frontier — and runs the LB_Keogh → LB_Improved → band-DP
+    cascade under the candidate ordering ``order`` (defaults to the
+    metric's, see ``core.metric.ORDERS``).  ``return_stats=True`` appends a
+    per-stage cascade-counter dict (:data:`STAT_KEYS` + ``dp_survivors``)
+    to the return tuple."""
     qs = np.ascontiguousarray(np.atleast_2d(qs), np.float32)
-    met = resolve(metric, qs.shape[1], band)
-    if met.is_dtw:
-        chunk = min(chunk, DTW_CHUNK)
+    met = resolve(metric, qs.shape[1], band, order)
     if dev is None:
         dev = index.device_index(chunk=chunk, n_shards=_mesh_shards(mesh),
                                  mesh=mesh)
@@ -313,8 +551,15 @@ def exact_search_device_batch(index: DumpyIndex, qs: np.ndarray, k: int,
     # near-ties across the k boundary; the host re-rank then picks the true
     # top-k from the widened set
     kk = _result_margin(dev, k) + 8
-    d, ids, visited = _exact_knn_sharded(dev, prep, qs_dev, k=kk, metric=met)
+    knn = _exact_knn_lane_sharded if (met.is_dtw and met.order != "shared") \
+        else _exact_knn_sharded
+    d, ids, visited, st = knn(dev, prep, qs_dev, k=kk, metric=met)
     ids_out, d_out = _finalize_exact(index, qs, np.asarray(ids), k, met)
+    if return_stats:
+        st = np.asarray(st)
+        stats = dict(zip(STAT_KEYS, (int(v) for v in st)))
+        stats["dp_survivors"] = int(st[0] - st[1] - st[2] - st[3])
+        return ids_out, d_out, np.asarray(visited), stats
     return ids_out, d_out, np.asarray(visited)
 
 

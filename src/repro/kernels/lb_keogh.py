@@ -19,6 +19,42 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def _wmax(x: jax.Array, r: int) -> jax.Array:
+    """Edge-clamped sliding-window max (window ``[i-r, i+r]``) over the last
+    axis of a ``(TB, n)`` tile — van Herk/Gil–Werman, same contract as
+    :func:`repro.core.lb._window_max` (kept local: kernels stay leaf
+    modules with no ``core`` imports)."""
+    TB, n = x.shape
+    if r <= 0:
+        return x
+    w = 2 * r + 1
+    nb = -(-(n + r) // w)
+    neg = jnp.full((TB, nb * w - n), -jnp.inf, x.dtype)
+    blocks = jnp.concatenate([x, neg], axis=-1).reshape(TB, nb, w)
+    run = jax.lax.cummax(blocks, axis=2).reshape(TB, nb * w)
+    suf = jnp.flip(jax.lax.cummax(jnp.flip(blocks, -1), axis=2), -1) \
+        .reshape(TB, nb * w)
+    lead = jnp.full((TB, r), -jnp.inf, x.dtype)
+    return jnp.maximum(jnp.concatenate([lead, suf], axis=-1)[:, :n],
+                       run[:, r:r + n])
+
+
+def _improved_kernel(r, x_ref, q_ref, u_ref, l_ref, o_ref):
+    x = x_ref[...]                   # (TB, n)
+    q = q_ref[...]                   # (1, n)
+    U = u_ref[...]
+    L = l_ref[...]
+    above = jnp.maximum(x - U, 0.0)
+    below = jnp.maximum(L - x, 0.0)
+    d1 = jnp.maximum(above, below)   # first pass: LB_Keogh(x | env(q))
+    h = jnp.clip(x, L, U)            # projection of x onto the envelope
+    Uh = _wmax(h, r)                 # second pass: LB_Keogh(q | env(h))
+    Lh = -_wmax(-h, r)
+    d2 = jnp.maximum(jnp.maximum(q - Uh, 0.0), jnp.maximum(Lh - q, 0.0))
+    o_ref[...] = (d1 * d1).sum(axis=-1, keepdims=True) \
+        + (d2 * d2).sum(axis=-1, keepdims=True)
+
+
 def _kernel(x_ref, u_ref, l_ref, o_ref):
     x = x_ref[...]                   # (TB, n)
     U = u_ref[...]                   # (1, n)
@@ -50,4 +86,41 @@ def lb_keogh(x: jax.Array, U: jax.Array, L: jax.Array, *, block_b: int = 256,
         out_shape=jax.ShapeDtypeStruct((Bp, 1), jnp.float32),
         interpret=interpret,
     )(xp, Up, Lp)
+    return out[:B, 0]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("r", "block_b", "interpret"))
+def lb_improved(x: jax.Array, q: jax.Array, U: jax.Array, L: jax.Array, *,
+                r: int, block_b: int = 256,
+                interpret: bool = True) -> jax.Array:
+    """Squared LB_Improved (Lemire 2009): ``x [B, n]`` candidates, ``q [n]``
+    query, ``U/L [n]`` its envelope, band radius ``r`` → squared LB [B].
+
+    ``LB_Improved² = LB_Keogh²(x | env(q)) + LB_Keogh²(q | env(h))`` with
+    ``h = clip(x, L, U)`` the envelope projection of the candidate.  Both
+    terms are banded-L2 slacks of disjoint alignment deficits, so the
+    squared forms add and the sum still lower-bounds DTW² while dominating
+    plain LB_Keogh.  One fused tile: no second kernel launch for the
+    reverse pass.
+    """
+    B, n = x.shape
+    Bp = -(-B // block_b) * block_b
+    xp = jnp.pad(x.astype(jnp.float32), ((0, Bp - B), (0, 0)))
+    qp = q.astype(jnp.float32)[None, :]
+    Up = U.astype(jnp.float32)[None, :]
+    Lp = L.astype(jnp.float32)[None, :]
+    out = pl.pallas_call(
+        functools.partial(_improved_kernel, int(r)),
+        grid=(Bp // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, 1), jnp.float32),
+        interpret=interpret,
+    )(xp, qp, Up, Lp)
     return out[:B, 0]

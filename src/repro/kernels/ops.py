@@ -55,16 +55,30 @@ def lb_paa_interval(seg_lo: jax.Array, seg_hi: jax.Array, lo: jax.Array,
 
 
 def lb_keogh(x: jax.Array, U: jax.Array, L: jax.Array) -> jax.Array:
-    """Squared LB_Keogh per candidate (DTW pre-filter)."""
+    """Squared LB_Keogh per candidate (DTW pre-filter, cascade stage 1)."""
     return _lbk.lb_keogh(x, U, L, interpret=_interpret())
+
+
+def lb_improved(x: jax.Array, q: jax.Array, U: jax.Array, L: jax.Array,
+                r: int) -> jax.Array:
+    """Squared LB_Improved per candidate (cascade stage 2: second-pass
+    envelope of the LB_Keogh projection; dominates ``lb_keogh`` and still
+    lower-bounds DTW²).  Pallas kernel on TPU; off-TPU the batched jnp
+    twin — one fused XLA program beats interpreting the grid on CPU."""
+    if _interpret():
+        from repro.core.lb import lb_improved2_batch_jnp
+        return lb_improved2_batch_jnp(
+            x, q[None, :], U[None, :], L[None, :], r)[0]
+    return _lbk.lb_improved(x, q, U, L, r=r, interpret=False)
 
 
 def dtw_band(qs: jax.Array, xs: jax.Array, mask: jax.Array,
              cutoff2: jax.Array, r: int) -> jax.Array:
-    """Masked banded DTW² ``[Q, m]`` with cutoff early-abandon — the fused
-    DP of the DTW search paths (masked lanes skip work, dead tiles skip
-    entirely).  Pallas kernel on TPU; off-TPU the jnp anti-diagonal twin
-    (one XLA while_loop, same masking semantics)."""
+    """Masked banded DTW² ``[Q, m]`` with cutoff early-abandon — the final
+    stage of the LB_Keogh → LB_Improved → DP cascade (``mask`` arrives with
+    both LB stages already applied, so only cascade survivors pay the
+    O(n·band) DP).  Pallas kernel on TPU; off-TPU the jnp anti-diagonal
+    twin (one XLA while_loop, same masking semantics)."""
     if _interpret():
         from repro.core.lb import dtw2_masked_batch_jnp
         return dtw2_masked_batch_jnp(qs, xs, r, mask, cutoff2)

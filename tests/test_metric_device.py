@@ -16,7 +16,8 @@ from _propcheck import given, settings, st
 from repro.core.build import DumpyParams
 from repro.core.device_index import DeviceIndex
 from repro.core.index import DumpyIndex
-from repro.core.metric import Metric, default_band, resolve
+from repro.core.metric import (DTW_DEFAULT_ORDER, Metric, default_band,
+                               resolve)
 from repro.core.sax import SaxParams
 from repro.core.search import (_encode_query, approximate_search,
                                exact_search, extended_search, route_to_leaf)
@@ -45,12 +46,17 @@ def built_fuzzy():
 
 def test_metric_resolve_contract():
     assert resolve("ed", 64) == Metric("ed", 0)
-    assert resolve("dtw", 64) == Metric("dtw", default_band(64))
-    assert resolve("dtw", 64, band=3) == Metric("dtw", 3)
+    assert resolve("dtw", 64) == Metric("dtw", default_band(64),
+                                        DTW_DEFAULT_ORDER)
+    assert resolve("dtw", 64, band=3) == Metric("dtw", 3, DTW_DEFAULT_ORDER)
+    assert resolve("dtw", 64, order="perq").order == "perq"
     m = Metric("dtw", 5)
     assert resolve(m, 128) is m                       # pass-through
+    assert resolve(m, 128, order="perq") == Metric("dtw", 5, "perq")
     with pytest.raises(ValueError):
         Metric("cosine")
+    with pytest.raises(ValueError):
+        Metric("dtw", 5, order="zigzag")
 
 
 def test_dtw_exact_device_matches_host(built):
@@ -274,7 +280,7 @@ qs = random_walks(4, 64, seed=11)
 mesh = make_mesh((4,), ("data",))
 ids1, d1, _ = exact_search_device_batch(idx, qs, 5, metric="dtw")
 ids4, d4, _ = exact_search_device_batch(idx, qs, 5, mesh=mesh, metric="dtw")
-dev = idx._device_cache[(256, 4, mesh)][0]
+dev = idx._device_cache[(2048, 4, mesh)][0]   # DTW shares the ED-width layout
 assert len(dev.db.sharding.device_set) == 4, dev.db.sharding
 assert (ids1 == ids4).all() and (d1 == d4).all()                # bitwise
 for i, q in enumerate(qs):
