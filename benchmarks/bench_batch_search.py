@@ -58,10 +58,13 @@ OUT_JSON = os.path.join(os.path.dirname(os.path.dirname(
 
 
 def _time(fn, repeat: int = 3) -> float:
-    fn()                                # warmup: compile + caches
+    import jax
+
+    jax.block_until_ready(fn())         # warmup: compile + caches
     t0 = time.perf_counter()
     for _ in range(repeat):
-        fn()
+        out = fn()
+    jax.block_until_ready(out)          # async dispatch: sync before stopping
     return (time.perf_counter() - t0) / repeat
 
 

@@ -30,6 +30,7 @@ import os
 import sys
 import time
 
+import jax
 import numpy as np
 
 from repro.core.index import DumpyIndex
@@ -59,6 +60,7 @@ def _bench_backends(rows: list, record: dict, scales) -> None:
         DumpyIndex.build(db[: min(n, 2000)], p, backend="device")
         t0 = time.perf_counter()
         dev = DumpyIndex.build(db, p, backend="device")
+        jax.block_until_ready(dev.flat.order)   # async dispatch: sync window
         t_dev = time.perf_counter() - t0
         t0 = time.perf_counter()
         host = DumpyIndex.build(db, p)

@@ -17,6 +17,8 @@ from . import common
 
 def _workload(idx, inserts: np.ndarray, queries: np.ndarray,
               batch: int) -> tuple[float, float, bool]:
+    # lint: allow-timing — host-only window (insert + host exact_search +
+    # numpy brute force); there is no async device dispatch to sync.
     t0 = time.perf_counter()
     qi = 0
     exact_ok = True

@@ -62,10 +62,18 @@ BUILDERS = {
 
 
 def timed(fn, *args, repeat: int = 1, **kw):
+    """Wall-clock ``fn`` and return ``(out, seconds/repeat)``.
+
+    The result is ``jax.block_until_ready``-ed inside the window: JAX
+    dispatch is async, so without the sync a device-only path (e.g.
+    ``rerank=False`` search) times the enqueue, not the compute.  Host
+    results pass through the sync untouched."""
+    import jax
+
     t0 = time.perf_counter()
     out = None
     for _ in range(repeat):
-        out = fn(*args, **kw)
+        out = jax.block_until_ready(fn(*args, **kw))
     dt = (time.perf_counter() - t0) / repeat
     return out, dt
 

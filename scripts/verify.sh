@@ -1,16 +1,29 @@
 #!/usr/bin/env bash
-# Tier-1 verification: the full offline test suite (see tests/README.md),
-# followed by the seconds-scale benchmark smokes (--quick, no baseline
-# updates): the batched-search smoke (DeviceIndex serving paths end-to-end —
-# exact, approximate, the extended (Alg. 4) nbr sweep with recall@k, and the
-# DTW metric smoke, which asserts the LB_Keogh → LB_Improved → band-DP
-# cascade fires at recall 1.0) and the build smoke (host vs device backend
-# with the layout-parity check inline).  The full (non-quick) bench extends
-# its >10% regression warnings to the DTW keys: qps_dtw_exact_batch,
-# qps_dtw_topk_masked, recall_dtw_exact and the extended-nbr recalls.
+# Tier-1 verification: static gates first, then the full offline test suite
+# (see tests/README.md), then the seconds-scale benchmark smokes.
+#
+#   1. repro.analysis.lint  — AST linter for repo JAX hazards (host control
+#      flow on tracers, np.* under jit, unsynced perf_counter windows).
+#   2. repro.analysis.audit — compile-contract gate: every registered jitted
+#      program (ED/DTW exact, extended, approximate, one-shot, both build
+#      stages, serving head) is lowered on the fixed 8-way audit mesh and
+#      its contract (collectives, op/dtype census, host round-trips,
+#      while/cond, donation, peak bytes) is diffed against CONTRACTS.json.
+#      Undeclared drift fails; intended drift is re-blessed with --update
+#      and declared in the PR (docs/static_analysis.md).
+#   3. pytest — the full offline suite.
+#   4. bench smokes (--quick, no baseline updates): the batched-search smoke
+#      (DeviceIndex serving paths end-to-end — exact, approximate, the
+#      extended (Alg. 4) nbr sweep with recall@k, and the DTW metric smoke,
+#      which asserts the LB_Keogh → LB_Improved → band-DP cascade fires at
+#      recall 1.0) and the build smoke (host vs device backend with the
+#      layout-parity check inline).  The full (non-quick) bench extends its
+#      >10% regression warnings to the DTW keys.
 # Usage: scripts/verify.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m repro.analysis.lint
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m repro.analysis.audit
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.bench_batch_search --quick
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.bench_build --quick

@@ -1,0 +1,25 @@
+"""Compile-contract audit: a static-analysis gate over every jitted program.
+
+The subsystem has four legs (see ``docs/static_analysis.md``):
+
+* ``registry``  — declarative map of every jitted entry point to abstract
+  input specs (the ``core.distributed.lower_*`` cells, extended to the
+  build and serving programs) plus per-program policy flags.
+* ``contracts`` — lower each entry, extract its *compile contract*
+  (collectives, op/dtype census, host round-trips, control flow, donation,
+  peak live bytes) and diff it against the committed golden
+  ``CONTRACTS.json``.
+* ``lint``      — AST linter for repo-specific JAX hazards (host control
+  flow on tracers, ``np.*`` under jit, unhashable statics, unsynced
+  ``perf_counter`` windows).
+* ``recompile`` — runtime guard counting XLA compiles across a
+  k/nbr/metric/batch sweep, asserting bounded cache-key cardinality.
+
+CLI gates (both wired into ``scripts/verify.sh``)::
+
+    PYTHONPATH=src python -m repro.analysis.audit [--update]
+    PYTHONPATH=src python -m repro.analysis.lint [paths ...]
+
+Importing this package never initializes jax; the audit CLI pins its own
+device count before jax wakes up.
+"""

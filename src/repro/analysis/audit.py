@@ -1,0 +1,153 @@
+"""Compile-contract audit CLI.
+
+::
+
+    PYTHONPATH=src python -m repro.analysis.audit            # gate
+    PYTHONPATH=src python -m repro.analysis.audit --update   # re-bless
+    PYTHONPATH=src python -m repro.analysis.audit --only search_exact_ed
+
+Lowers every program in :mod:`repro.analysis.registry` on the fixed 8-way
+audit mesh, extracts its contract (:mod:`repro.analysis.contracts`) and
+diffs against the committed golden ``CONTRACTS.json`` at the repo root.
+Exit 1 on (a) policy violations (f64 in a device path, host round-trips,
+collectives in shard-local programs — never blessable), (b) undeclared
+drift vs the golden, (c) stale/missing golden entries.
+
+``--update`` rewrites the golden from the current extraction — legitimate
+only when a PR *intends* the program change and says so (see
+``docs/static_analysis.md``); policy violations still fail under
+``--update``.
+"""
+import os
+import sys
+
+if __name__ == "__main__":
+    # Pin the audit device count BEFORE jax initializes.  Only the CLI path
+    # mutates the environment — importing this module does nothing.
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=8").strip()
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+GOLDEN_PATH = Path(__file__).resolve().parents[3] / "CONTRACTS.json"
+
+
+def _golden_payload(results: dict) -> dict:
+    import jax
+
+    from . import registry
+
+    return {
+        "_meta": {
+            "tool": "python -m repro.analysis.audit --update",
+            "jax": jax.__version__,
+            "n_devices": registry.AUDIT_DEVICES,
+            "audit_shapes": dict(registry.AUDIT_SHAPES,
+                                 k=registry.AUDIT_K, nbr=registry.AUDIT_NBR,
+                                 q_batch=registry.AUDIT_Q_BATCH),
+            "serving_shapes": dict(registry.SERVING_SHAPES),
+        },
+        "programs": results,
+    }
+
+
+def run_audit(update: bool = False, names=None,
+              golden_path: Path = GOLDEN_PATH, verbose: bool = True) -> int:
+    from . import contracts, registry
+
+    mesh = registry.audit_mesh()
+    ents = registry.entries(names)
+    results: dict = {}
+    problems: list[str] = []
+    t0 = time.time()
+    for entry in ents:
+        t1 = time.time()
+        results.update(contracts.extract_all(mesh, [entry.name]))
+        problems += contracts.policy_violations(entry, results[entry.name])
+        if verbose:
+            c = results[entry.name]
+            ncoll = sum(d["count"]
+                        for d in c["collectives"]["per_kind"].values())
+            print(f"[audit] {entry.name:22s} compile={time.time()-t1:5.1f}s "
+                  f"collectives={ncoll:2d} "
+                  f"peak={c['memory']['peak_bytes']/2**20:7.1f}MiB "
+                  f"while={c['control_flow']['while']}")
+
+    for p in problems:
+        print(f"POLICY: {p}", file=sys.stderr)
+
+    if update:
+        if names is not None:
+            # partial update: merge into the existing golden
+            try:
+                payload = json.loads(golden_path.read_text())
+            except (OSError, ValueError):
+                payload = _golden_payload({})
+            payload["programs"].update(results)
+            payload["_meta"] = _golden_payload({})["_meta"]
+        else:
+            payload = _golden_payload(results)
+        golden_path.write_text(json.dumps(payload, indent=1, sort_keys=True)
+                               + "\n")
+        print(f"[audit] wrote {len(payload['programs'])} contract(s) to "
+              f"{golden_path} in {time.time()-t0:.1f}s")
+        return 1 if problems else 0
+
+    try:
+        golden = json.loads(golden_path.read_text())["programs"]
+    except (OSError, ValueError, KeyError):
+        print(f"AUDIT FAIL: no readable golden at {golden_path}; run "
+              f"`python -m repro.analysis.audit --update` and commit it",
+              file=sys.stderr)
+        return 1
+
+    drift: list[str] = []
+    for name, contract in results.items():
+        if name not in golden:
+            drift.append(f"{name}: not in golden (new program? bless with "
+                         f"--update)")
+            continue
+        drift += contracts.diff_contract(name, golden[name], contract)
+    if names is None:
+        for stale in sorted(set(golden) - set(results)):
+            drift.append(f"{stale}: in golden but not registered (deleted "
+                         f"program? bless with --update)")
+
+    for d in drift:
+        print(f"DRIFT: {d}", file=sys.stderr)
+    n_bad = len(problems) + len(drift)
+    verdict = "FAIL" if n_bad else "PASS"
+    print(f"[audit] {verdict}: {len(results)} program(s), "
+          f"{len(problems)} policy violation(s), {len(drift)} drift line(s) "
+          f"in {time.time()-t0:.1f}s")
+    if drift:
+        print("[audit] intended change? re-bless with "
+              "`python -m repro.analysis.audit --update` and declare it in "
+              "the PR (docs/static_analysis.md)")
+    return 1 if n_bad else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.audit",
+        description="compile-contract audit over every jitted program")
+    ap.add_argument("--update", action="store_true",
+                    help="re-bless CONTRACTS.json from the current build")
+    ap.add_argument("--only", action="append", metavar="NAME",
+                    help="audit only NAME (repeatable)")
+    ap.add_argument("--golden", type=Path, default=GOLDEN_PATH,
+                    help="golden path (default: repo-root CONTRACTS.json)")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args(argv)
+    return run_audit(update=args.update, names=args.only,
+                     golden_path=args.golden, verbose=not args.quiet)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

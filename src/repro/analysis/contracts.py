@@ -1,0 +1,151 @@
+"""Extract, diff and police per-program compile contracts.
+
+A *contract* is the small structural fingerprint of one compiled module:
+
+* ``collectives``      — per-kind count/bytes + total (async pairs counted
+  at ``-start``; ``distributed.hlo_analysis.collective_stats``)
+* ``op_census``        — full HLO opcode histogram
+* ``dtype_census``     — op-result element dtypes (f64 leaks show up here)
+* ``host_calls``       — infeed / outfeed / host-callback custom-calls
+* ``custom_call_targets`` — every custom-call target (TopK, sort, ...)
+* ``control_flow``     — ``while`` / ``conditional`` counts
+* ``donation``         — input/output alias pairs + aliased bytes
+* ``memory``           — argument/output/temp/alias and derived peak bytes
+
+Counts are exact-diffed against the golden ``CONTRACTS.json``; byte-valued
+memory fields get a small relative tolerance (XLA may legally jiggle
+buffer assignment a few bytes between point releases without the program
+*structure* drifting).
+
+Independent of the golden, ``policy_violations`` enforces invariants that
+are never legitimate to "declare": f64 ops in a device path, host
+round-trips inside any jitted program, and collectives in a program the
+registry declares shard-local.
+"""
+from __future__ import annotations
+
+import re
+
+#: relative tolerance on byte-valued memory fields (counts stay exact)
+MEM_RTOL = 0.02
+
+_ALIAS_PAIR_RE = re.compile(r"\(\s*\d+\s*,\s*\{[^}]*\}\s*(?:,\s*[a-z-]+)?\)")
+
+
+def _io_alias_pairs(hlo_text: str) -> int:
+    """Entries in the module's ``input_output_alias={...}`` map (the map
+    nests braces, so walk it with a depth counter rather than a regex)."""
+    start = hlo_text.find("input_output_alias={")
+    if start < 0:
+        return 0
+    i = hlo_text.index("{", start)
+    depth, j = 0, i
+    for j in range(i, min(len(hlo_text), i + 100_000)):
+        if hlo_text[j] == "{":
+            depth += 1
+        elif hlo_text[j] == "}":
+            depth -= 1
+            if depth == 0:
+                break
+    return len(_ALIAS_PAIR_RE.findall(hlo_text[i:j + 1]))
+
+
+def extract_contract(lowered) -> dict:
+    """Compile ``lowered`` (a ``jax.stages.Lowered``; an already-compiled
+    object passes through) and reduce the module to its contract."""
+    from repro.distributed.hlo_analysis import (collective_stats,
+                                                control_flow_stats,
+                                                dtype_census,
+                                                host_call_stats, op_census)
+
+    compiled = lowered.compile() if hasattr(lowered, "compile") else lowered
+    hlo = compiled.as_text()
+    mem = compiled.memory_analysis()
+    hc = host_call_stats(hlo)
+    return {
+        "collectives": collective_stats(hlo),
+        "op_census": dict(op_census(hlo, top=None)),
+        "dtype_census": dtype_census(hlo),
+        "host_calls": {k: hc[k] for k in ("infeed", "outfeed",
+                                          "host_callbacks")},
+        "custom_call_targets": hc["custom_call_targets"],
+        "control_flow": control_flow_stats(hlo),
+        "donation": {"io_alias_pairs": _io_alias_pairs(hlo),
+                     "alias_bytes": int(mem.alias_size_in_bytes)},
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "peak_bytes": int(mem.argument_size_in_bytes
+                              + mem.output_size_in_bytes
+                              + mem.temp_size_in_bytes
+                              - mem.alias_size_in_bytes),
+        },
+    }
+
+
+def extract_all(mesh, names=None) -> dict:
+    """Lower + compile every registered program; ``{name: contract}``."""
+    from repro.distributed.sharding import logical_rules
+
+    from . import registry
+
+    out = {}
+    with logical_rules(mesh):
+        for entry in registry.entries(names):
+            out[entry.name] = extract_contract(entry.lower(mesh))
+    return out
+
+
+def policy_violations(entry, contract: dict) -> list[str]:
+    """Golden-independent invariants (see module docstring)."""
+    v = []
+    f64 = contract["dtype_census"].get("f64", 0)
+    if entry.device_path and f64:
+        v.append(f"{entry.name}: {f64} f64 op(s) in a device path — "
+                 f"weak-type/x64 promotion leaked into the compiled program")
+    for k, n in contract["host_calls"].items():
+        if n:
+            v.append(f"{entry.name}: {n} {k} op(s) — jitted programs must "
+                     f"not round-trip to the host")
+    if not entry.sharded:
+        coll = contract["collectives"]
+        n = sum(d["count"] for d in coll["per_kind"].values())
+        if n:
+            kinds = sorted(coll["per_kind"])
+            v.append(f"{entry.name}: {n} collective op(s) ({', '.join(kinds)})"
+                     f" in a program declared shard-local/global")
+    return v
+
+
+def _flatten(d: dict, prefix: str = "") -> dict:
+    flat = {}
+    for k, val in d.items():
+        key = f"{prefix}.{k}" if prefix else str(k)
+        if isinstance(val, dict):
+            flat.update(_flatten(val, key))
+        else:
+            flat[key] = val
+    return flat
+
+
+def diff_contract(name: str, golden: dict, current: dict,
+                  mem_rtol: float = MEM_RTOL) -> list[str]:
+    """Human-readable drift lines (empty == no undeclared drift).
+
+    Every key is exact except ``memory.*`` / ``donation.alias_bytes``,
+    which pass within ``mem_rtol`` relative."""
+    g, c = _flatten(golden), _flatten(current)
+    drift = []
+    for key in sorted(set(g) | set(c)):
+        gv, cv = g.get(key), c.get(key)
+        if gv == cv:
+            continue
+        relaxed = key.startswith("memory.") or key == "donation.alias_bytes"
+        if relaxed and isinstance(gv, (int, float)) \
+                and isinstance(cv, (int, float)):
+            if abs(cv - gv) <= mem_rtol * max(abs(gv), 1):
+                continue
+        drift.append(f"{name}: {key}: {gv!r} -> {cv!r}")
+    return drift

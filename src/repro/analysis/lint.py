@@ -1,0 +1,287 @@
+"""AST linter for repo-specific JAX hazards.
+
+Pure-``ast`` (no jax import, no code execution), so it runs in milliseconds
+over the whole tree and can gate ``scripts/verify.sh`` unconditionally.
+
+Rules
+-----
+* **JX001** — Python ``if`` / ``while`` testing a tracer-bound name inside a
+  jitted function.  Under trace this raises ``TracerBoolConversionError`` at
+  best; at worst it silently specializes on one concrete value.  Only *bare*
+  names of non-static parameters are flagged: attribute access
+  (``dev.chunk``, ``x.shape``) is aux/static metadata by repo convention
+  and never descends.
+* **JX002** — ``np.*`` / ``numpy.*`` call inside a jitted function: numpy
+  silently materializes the tracer on host (ConcretizationTypeError, or a
+  constant baked at trace time).
+* **JX003** — a ``static_argnames``/``static_argnums`` parameter whose
+  default or annotation is an unhashable container (list/dict/set,
+  ``np.ndarray``): jit's cache keys statics by hash, so the first call dies
+  with ``TypeError: unhashable``.
+* **JX004** — ``float()`` / ``int()`` / ``bool()`` on a tracer-bound name
+  inside a jitted function (concretization).
+* **JX005** — ``len()`` on a tracer-bound name inside a jitted function
+  (works under trace but is a host int — usually meant ``.shape[0]``; it
+  silently freezes the dimension and is the classic ragged-batch bug).
+* **JX006** — a function with a ``time.perf_counter()`` window that never
+  calls ``block_until_ready``: JAX dispatch is async, so the window times
+  the enqueue, not the compute.  Suppress for genuinely host-only windows
+  with a ``# lint: allow-timing`` comment anywhere in the function body.
+
+A function is *jitted* when decorated with ``jax.jit`` / ``jit`` /
+``functools.partial(jax.jit, ...)`` / ``partial(jit, ...)``.  Statics are
+read off the decorator's ``static_argnums`` / ``static_argnames``.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.analysis.lint [paths ...]
+
+Default paths: ``src/repro`` and ``benchmarks``.  Exit 1 on any finding.
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+
+_NUMPY_ALIASES = {"np", "numpy"}
+_CONCRETIZERS = {"float", "int", "bool"}
+_TIMING_SUPPRESS = "lint: allow-timing"
+
+
+@dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+# ---------------------------------------------------------------------------
+# decorator analysis
+# ---------------------------------------------------------------------------
+
+def _is_jit_name(node: ast.AST) -> bool:
+    """``jax.jit`` / ``jit`` / ``pjit`` as a bare decorator expression."""
+    if isinstance(node, ast.Attribute):
+        return node.attr in ("jit", "pjit")
+    return isinstance(node, ast.Name) and node.id in ("jit", "pjit")
+
+
+def _jit_call_info(dec: ast.AST):
+    """``(is_jit, keywords)`` for one decorator node.
+
+    Handles ``@jax.jit``, ``@jax.jit(...)`` and
+    ``@functools.partial(jax.jit, ...)`` (and the bare-name spellings)."""
+    if _is_jit_name(dec):
+        return True, []
+    if isinstance(dec, ast.Call):
+        if _is_jit_name(dec.func):
+            return True, dec.keywords
+        f = dec.func
+        is_partial = (isinstance(f, ast.Attribute) and f.attr == "partial") \
+            or (isinstance(f, ast.Name) and f.id == "partial")
+        if is_partial and dec.args and _is_jit_name(dec.args[0]):
+            return True, dec.keywords
+    return False, []
+
+
+def _static_params(fn: ast.FunctionDef, keywords) -> set[str]:
+    """Parameter names marked static by the jit decorator's keywords."""
+    all_params = [a.arg for a in (fn.args.posonlyargs + fn.args.args
+                                  + fn.args.kwonlyargs)]
+    static: set[str] = set()
+    for kw in keywords:
+        if kw.arg == "static_argnames":
+            for node in ast.walk(kw.value):
+                if isinstance(node, ast.Constant) \
+                        and isinstance(node.value, str):
+                    static.add(node.value)
+        elif kw.arg == "static_argnums":
+            for node in ast.walk(kw.value):
+                if isinstance(node, ast.Constant) \
+                        and isinstance(node.value, int):
+                    if 0 <= node.value < len(all_params):
+                        static.add(all_params[node.value])
+    return static
+
+
+def _unhashable_param_types(fn: ast.FunctionDef) -> dict[str, str]:
+    """``{param: why}`` for params whose default/annotation is unhashable."""
+    bad: dict[str, str] = {}
+    args = fn.args.posonlyargs + fn.args.args
+    defaults = fn.args.defaults
+    offset = len(args) - len(defaults)
+    for i, a in enumerate(args):
+        d = defaults[i - offset] if i >= offset else None
+        if isinstance(d, (ast.List, ast.Dict, ast.Set)):
+            bad[a.arg] = f"default is a {type(d).__name__.lower()} literal"
+        ann = a.annotation
+        if isinstance(ann, ast.Name) and ann.id in ("list", "dict", "set"):
+            bad[a.arg] = f"annotated {ann.id}"
+        if isinstance(ann, ast.Attribute) and ann.attr == "ndarray":
+            bad[a.arg] = "annotated ndarray"
+    return bad
+
+
+# ---------------------------------------------------------------------------
+# per-function rule checks
+# ---------------------------------------------------------------------------
+
+def _bare_tracer_names(expr: ast.AST, tracers: set[str]) -> list[str]:
+    """Bare ``Name`` loads of tracer params in ``expr`` — deliberately does
+    not descend into ``Attribute`` nodes (``dev.chunk`` / ``x.shape`` are
+    static metadata) nor into ``Subscript`` slices of attributes."""
+    hits: list[str] = []
+
+    def walk(node: ast.AST) -> None:
+        if isinstance(node, ast.Attribute):
+            return                      # x.anything — static by convention
+        if isinstance(node, ast.Compare) and all(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            return                      # `x is (not) None` — structural test
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+            if node.id in tracers:
+                hits.append(node.id)
+            return
+        for child in ast.iter_child_nodes(node):
+            walk(child)
+
+    walk(expr)
+    return hits
+
+
+def _check_jitted(path: str, fn: ast.FunctionDef, keywords,
+                  findings: list[Finding]) -> None:
+    params = {a.arg for a in (fn.args.posonlyargs + fn.args.args
+                              + fn.args.kwonlyargs)}
+    static = _static_params(fn, keywords)
+    tracers = params - static - {"self", "cls"}
+
+    for name, why in _unhashable_param_types(fn).items():
+        if name in static:
+            findings.append(Finding(
+                path, fn.lineno, "JX003",
+                f"static arg `{name}` of jitted `{fn.name}` is unhashable "
+                f"({why}); jit hashes statics for its cache key"))
+
+    inner_shadow: set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node is not fn:
+            # closures see the same tracers; params of inner defs shadow
+            inner_shadow |= {a.arg for a in node.args.args}
+    tracers -= inner_shadow
+
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.If, ast.While)):
+            for name in _bare_tracer_names(node.test, tracers):
+                kind = "while" if isinstance(node, ast.While) else "if"
+                findings.append(Finding(
+                    path, node.lineno, "JX001",
+                    f"Python `{kind}` on tracer `{name}` inside jitted "
+                    f"`{fn.name}` — use lax.cond/select or mark it static"))
+        elif isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name) \
+                    and f.value.id in _NUMPY_ALIASES:
+                findings.append(Finding(
+                    path, node.lineno, "JX002",
+                    f"`{f.value.id}.{f.attr}(...)` inside jitted "
+                    f"`{fn.name}` — numpy concretizes tracers; use jnp"))
+            elif isinstance(f, ast.Name) and f.id in _CONCRETIZERS:
+                for name in _bare_tracer_names(node, tracers):
+                    findings.append(Finding(
+                        path, node.lineno, "JX004",
+                        f"`{f.id}({name})` on a tracer inside jitted "
+                        f"`{fn.name}` — concretization error under trace"))
+            elif isinstance(f, ast.Name) and f.id == "len" and node.args:
+                for name in _bare_tracer_names(node.args[0], tracers):
+                    findings.append(Finding(
+                        path, node.lineno, "JX005",
+                        f"`len({name})` on a tracer inside jitted "
+                        f"`{fn.name}` — freezes the dimension; use "
+                        f"`.shape[0]` to make that explicit"))
+
+
+def _check_timing(path: str, fn: ast.FunctionDef, source_lines: list[str],
+                  findings: list[Finding]) -> None:
+    perf_lines: list[int] = []
+    synced = False
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Attribute) and f.attr == "perf_counter":
+                perf_lines.append(node.lineno)
+            if isinstance(f, ast.Attribute) and f.attr == "block_until_ready":
+                synced = True
+            if isinstance(f, ast.Name) and f.id == "block_until_ready":
+                synced = True
+    if len(perf_lines) < 2 or synced:
+        return                          # no window, or a synced one
+    end = getattr(fn, "end_lineno", fn.lineno) or fn.lineno
+    body = "\n".join(source_lines[fn.lineno - 1:end])
+    if _TIMING_SUPPRESS in body:
+        return
+    findings.append(Finding(
+        path, perf_lines[0], "JX006",
+        f"`{fn.name}` times a perf_counter window without "
+        f"block_until_ready — async dispatch means this measures enqueue, "
+        f"not compute (add the sync, or `# {_TIMING_SUPPRESS}` if the "
+        f"window is host-only)"))
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def lint_source(source: str, path: str = "<string>") -> list[Finding]:
+    tree = ast.parse(source, filename=path)
+    lines = source.splitlines()
+    findings: list[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        for dec in node.decorator_list:
+            is_jit, keywords = _jit_call_info(dec)
+            if is_jit:
+                _check_jitted(path, node, keywords, findings)
+                break
+        _check_timing(path, node, lines, findings)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def lint_file(path: Path) -> list[Finding]:
+    return lint_source(path.read_text(), str(path))
+
+
+def lint_paths(paths) -> list[Finding]:
+    findings: list[Finding] = []
+    for p in paths:
+        p = Path(p)
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in files:
+            findings.extend(lint_file(f))
+    return findings
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if not argv:
+        root = Path(__file__).resolve().parents[3]
+        argv = [root / "src" / "repro", root / "benchmarks"]
+    findings = lint_paths(argv)
+    for f in findings:
+        print(f)
+    print(f"repro.analysis.lint: {len(findings)} finding(s) in "
+          f"{len(argv)} path(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

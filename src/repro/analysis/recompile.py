@@ -1,0 +1,150 @@
+"""Runtime recompile guard: bounded cache-key cardinality under a sweep.
+
+The repo's serving story hinges on programs being compiled at index load,
+not per request (``bench_batch_search`` measures steady state on that
+assumption, and ``DumpyIndex._n_device_builds`` already guards the
+device-*state* analogue).  This module guards the device-*program* side:
+
+* :class:`CompileCounter` counts every XLA compile while active, by
+  wrapping ``jax._src.compiler.compile_or_get_cached`` — the single funnel
+  both ``jit`` and ``pjit`` executables pass through (tracing-cache hits
+  never reach it).
+* :func:`run_sweep` drives the public batched search entry points across a
+  k × nbr × metric × batch grid **twice** and reports both passes'
+  counts.  The contract: pass 2 adds *zero* compiles (every static/shape
+  combination was cached by pass 1), and pass 1 stays under a declared
+  budget (no hidden per-call specialization, e.g. a host value leaking
+  into a static argument).
+
+``verify_sweep`` raises ``RecompileViolation`` on either breach — the
+gate tests (``tests/test_analysis_recompile.py``) assert it trips when a
+fresh-jit-per-call wrapper is patched in.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+#: compiles one (metric, k, batch)-combo may cost on its cold pass: the
+#: entry program plus its inner jitted helpers (query prep, encode, LB
+#: kernels, dedup/top-k, finalize).  The default sweep measures ~2.
+COMPILES_PER_COMBO = 8
+
+
+class RecompileViolation(AssertionError):
+    """A jitted entry point recompiled when its cache should have hit."""
+
+
+class CompileCounter:
+    """Context manager counting XLA compiles (see module docstring).
+
+    Nesting is safe (each level wraps the current funnel); the count is
+    per-instance.  Not thread-safe — the sweep is single-threaded."""
+
+    def __init__(self) -> None:
+        self.count = 0
+        self.names: list[str] = []
+        self._orig = None
+
+    def __enter__(self) -> "CompileCounter":
+        from jax._src import compiler as _compiler
+
+        self._orig = _compiler.compile_or_get_cached
+
+        def counted(backend, computation, *args, **kw):
+            self.count += 1
+            try:    # computation is an ir.Module; sym_name is the jit label
+                self.names.append(
+                    computation.operation.attributes["sym_name"].value)
+            except Exception:
+                self.names.append("<unknown>")
+            return orig(backend, computation, *args, **kw)
+
+        orig = self._orig
+        _compiler.compile_or_get_cached = counted
+        return self
+
+    def __exit__(self, *exc) -> None:
+        from jax._src import compiler as _compiler
+
+        _compiler.compile_or_get_cached = self._orig
+        self._orig = None
+
+
+@dataclass(frozen=True)
+class SweepReport:
+    first_pass: int
+    second_pass: int
+    budget: int
+    combos: int
+    second_pass_names: tuple[str, ...]
+
+    @property
+    def ok(self) -> bool:
+        return self.second_pass == 0 and self.first_pass <= self.budget
+
+
+def _default_index(n: int = 2048, length: int = 64):
+    from repro.core.build import DumpyParams
+    from repro.core.index import DumpyIndex
+    from repro.core.sax import SaxParams
+    from repro.core.split import SplitParams
+    from repro.data.series import random_walks
+
+    db = random_walks(n, length, seed=7)
+    p = DumpyParams(sax=SaxParams(w=8, b=8), split=SplitParams(th=128))
+    return DumpyIndex.build(db, p)
+
+
+def run_sweep(index=None, *, ks=(5, 10), nbrs=(2, 4), metrics=("ed", "dtw"),
+              batches=(4, 8), exact_fn=None, extended_fn=None) -> SweepReport:
+    """Run the k/nbr/metric/batch sweep twice and count compiles per pass.
+
+    ``exact_fn`` / ``extended_fn`` default to the public batched entry
+    points; tests substitute misbehaving wrappers to prove the gate trips.
+    """
+    from repro.core import search_device as sd
+    from repro.data.series import query_workload
+
+    if index is None:
+        index = _default_index()
+    exact_fn = exact_fn or sd.exact_search_device_batch
+    extended_fn = extended_fn or sd.extended_search_device_batch
+
+    length = index.db.shape[1]
+    qs = query_workload(max(batches), length)
+
+    def one_pass(counter: CompileCounter) -> None:
+        with counter:
+            for met in metrics:
+                for k in ks:
+                    for b in batches:
+                        exact_fn(index, qs[:b], k, metric=met)
+                for nbr in nbrs:
+                    extended_fn(index, qs[: max(batches)], max(ks), nbr=nbr,
+                                metric=met)
+
+    index.device_index()                # device state builds outside the count
+    first, second = CompileCounter(), CompileCounter()
+    one_pass(first)
+    one_pass(second)
+    combos = len(metrics) * (len(ks) * len(batches) + len(nbrs))
+    return SweepReport(first_pass=first.count, second_pass=second.count,
+                       budget=combos * COMPILES_PER_COMBO, combos=combos,
+                       second_pass_names=tuple(second.names))
+
+
+def verify_sweep(report: SweepReport | None = None, **kw) -> SweepReport:
+    """Raise :class:`RecompileViolation` unless the sweep is steady-state."""
+    rep = report if report is not None else run_sweep(**kw)
+    if rep.second_pass != 0:
+        names = ", ".join(rep.second_pass_names[:8])
+        raise RecompileViolation(
+            f"{rep.second_pass} recompile(s) on the warm pass of the "
+            f"k/nbr/metric/batch sweep (programs: {names}) — a cache key is "
+            f"unstable (unhashable static? host value in the key?)")
+    if rep.first_pass > rep.budget:
+        raise RecompileViolation(
+            f"cold pass compiled {rep.first_pass} programs for "
+            f"{rep.combos} static combos (budget {rep.budget}) — per-call "
+            f"specialization is leaking into the jit cache key")
+    return rep

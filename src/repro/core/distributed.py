@@ -153,16 +153,20 @@ def lower_search_sharded(mesh, *, n_series: int = 1 << 22, length: int = 256,
     analyses."""
     from .device_index import abstract_device_index
     from .metric import ED
-    from .search_device import _exact_knn_sharded, _mesh_shards
+    from .search_device import (_exact_knn_lane_sharded, _exact_knn_sharded,
+                                _mesh_shards)
 
     met = metric or ED
     dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
     dev_abs = abstract_device_index(n_series, length, w,
                                     n_shards=_mesh_shards(mesh),
                                     chunk=chunk, n_leaves=n_leaves)
+    # the same program selection as exact_search_device_batch: DTW with a
+    # per-query candidate ordering lowers the lane program
+    knn = _exact_knn_lane_sharded if (met.is_dtw and met.order != "shared") \
+        else _exact_knn_sharded
     # close over k/metric: pjit rejects kwargs when in_shardings is given
-    search_k = lambda d, prep, q: _exact_knn_sharded(d, prep, q, k=k,
-                                                     metric=met)
+    search_k = lambda d, prep, q: knn(d, prep, q, k=k, metric=met)
     jitted = jax.jit(search_k,
                      in_shardings=(dev_abs.shardings(mesh, dp), None, None))
     prep_abs = _abstract_prep(q_batch, w, length)
@@ -173,15 +177,16 @@ def lower_search_sharded(mesh, *, n_series: int = 1 << 22, length: int = 256,
 def lower_search_dtw(mesh, *, n_series: int = 1 << 22, length: int = 256,
                      w: int = 16, chunk: int | None = None,
                      n_leaves: int = 16384, k: int = 58, q_batch: int = 64,
-                     band: int | None = None):
+                     band: int | None = None, order: str = "shared"):
     """Lower the sharded *DTW* exact search (envelope bounds + the
     LB_Keogh → LB_Improved cascade + fused masked band DP) on ``mesh`` —
     the ``dumpy_search_dtw`` roofline cell.  DTW now shares the ED-width
     layout (spans sub-block in-program, ``search_device.DTW_SUB``), so the
     span chunk defaults to the same width the ED cell lowers with,
-    matching what ``exact_search_device_batch(metric="dtw")`` serves
-    with.  Lowers the ``"shared"``-order program (the lane-ordered
-    programs specialize on concrete shard shapes, not abstract meshes)."""
+    matching what ``exact_search_device_batch(metric="dtw")`` serves with.
+    ``order`` selects the candidate ordering: ``"shared"`` lowers the span
+    program, ``"perq"``/``"cluster"`` the lane-ordered program (the serving
+    default — see ``core.metric.DTW_DEFAULT_ORDER``)."""
     from .metric import Metric, default_band
 
     return lower_search_sharded(
@@ -189,7 +194,8 @@ def lower_search_dtw(mesh, *, n_series: int = 1 << 22, length: int = 256,
         chunk=chunk if chunk is not None else 8192,
         n_leaves=n_leaves, k=k, q_batch=q_batch,
         metric=Metric("dtw",
-                      band if band is not None else default_band(length)))
+                      band if band is not None else default_band(length),
+                      order))
 
 
 def lower_search_extended(mesh, *, n_series: int = 1 << 22, length: int = 256,
@@ -217,29 +223,106 @@ def lower_search_extended(mesh, *, n_series: int = 1 << 22, length: int = 256,
     return jitted.lower(dev_abs, prep_abs, sax_abs, q_abs)
 
 
+def lower_search_approx(mesh, *, n_series: int = 1 << 22, length: int = 256,
+                        w: int = 16, chunk: int = 8192,
+                        n_leaves: int = 16384, k: int = 58, nbr: int = 4,
+                        q_batch: int = 64, metric=None):
+    """Lower the batched approximate search (vectorized root→leaf descent +
+    leaf-rank scan, ``search_device._approx_knn_device``) on ``mesh`` with
+    production shardings.  Returns the jax ``Lowered`` object."""
+    from .device_index import abstract_device_index
+    from .metric import ED
+    from .search_device import _approx_knn_device, _mesh_shards
+
+    met = metric or ED
+    dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    dev_abs = abstract_device_index(n_series, length, w,
+                                    n_shards=_mesh_shards(mesh),
+                                    chunk=chunk, n_leaves=n_leaves)
+    approx_k = lambda d, prep, sq, q: _approx_knn_device(
+        d, prep, sq, q, k=k, kk=k, nbr=nbr, metric=met)
+    jitted = jax.jit(approx_k,
+                     in_shardings=(dev_abs.shardings(mesh, dp),
+                                   None, None, None))
+    prep_abs = _abstract_prep(q_batch, w, length)
+    sax_abs = jax.ShapeDtypeStruct((q_batch, w), jnp.int32)
+    q_abs = jax.ShapeDtypeStruct((q_batch, length), jnp.float32)
+    return jitted.lower(dev_abs, prep_abs, sax_abs, q_abs)
+
+
+def lower_serving_head(mesh, *, vocab: int = 1 << 17, d_model: int = 256,
+                       w: int = 16, n_leaves: int = 4096,
+                       r_candidates: int = 128, nbr: int = 8,
+                       q_batch: int = 32):
+    """Lower the ``KnnSoftmaxHead`` batched retrieval program — the extended
+    (Alg. 4) search at serving widths: ``r_candidates`` results per decode
+    row, device-only (``rerank=False``, so no +8 re-rank slack), the
+    augmented MIPS series length padded to a multiple of ``w`` exactly as
+    ``KnnSoftmaxHead.__init__`` pads it."""
+    length = d_model + 1 + ((-(d_model + 1)) % w)   # MIPS aug + pad, as served
+    return lower_search_extended(mesh, n_series=vocab, length=length, w=w,
+                                 chunk=min(8192, vocab), n_leaves=n_leaves,
+                                 k=r_candidates, nbr=nbr, q_batch=q_batch)
+
+
+def lower_search_oneshot(mesh, *, n_series: int = 1 << 22, length: int = 256,
+                         w: int = 16, n_leaves: int = 16384, k: int = 50,
+                         q_batch: int = 64):
+    """Lower the one-shot LB-scan + exact-distance search (``search_step``)
+    with the collection batch-sharded — the ``dumpy_search`` roofline
+    cell."""
+    dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    sh = NamedSharding(mesh, P(dp, None))
+    db_abs = jax.ShapeDtypeStruct((n_series, length), jnp.float32)
+    q_abs = jax.ShapeDtypeStruct((q_batch, length), jnp.float32)
+    lo_abs = jax.ShapeDtypeStruct((n_leaves, w), jnp.float32)
+    jitted = jax.jit(search_step, static_argnums=(4,),
+                     in_shardings=(None, sh, None, None))
+    return jitted.lower(q_abs, db_abs, lo_abs, lo_abs, k)
+
+
+def lower_build_step(mesh, *, n_series: int = 1 << 22, length: int = 256,
+                     w: int = 16, b: int = 8):
+    """Lower Stage 1 + the root histogram (``build_step``) with the
+    collection batch-sharded — the ``dumpy_build`` roofline cell."""
+    dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    sh = NamedSharding(mesh, P(dp, None))
+    db_abs = jax.ShapeDtypeStruct((n_series, length), jnp.float32)
+    jitted = jax.jit(build_step, static_argnums=(1, 2), in_shardings=(sh,))
+    return jitted.lower(db_abs, w, b)
+
+
+def lower_build_bottomup(mesh, *, n_series: int = 1 << 22, w: int = 16,
+                         b: int = 8):
+    """Lower the bottom-up device build's grouping program
+    (``build_device._lexsort_words``: packed-word lexsort + group
+    delimiting) — the device-side heart of the staged build pipeline.  The
+    lexsort is global (unsharded); the program must stay collective-free."""
+    from .build_device import _lexsort_words
+
+    sax_abs = jax.ShapeDtypeStruct((n_series, w), jnp.uint8)
+    return jax.jit(lambda s: _lexsort_words(s, w, b)).lower(sax_abs)
+
+
 def dryrun_cells(mesh) -> dict:
     """Extra §Roofline cells for the paper's own technique: lower+compile the
-    distributed build step, the one-shot search, the DeviceIndex sharded
-    windowed search and the sharded extended (Alg. 4) search on the
-    production mesh."""
+    distributed build step (Stage 1 and the bottom-up grouping program), the
+    one-shot search, the DeviceIndex sharded windowed search, the sharded
+    extended (Alg. 4) search, the batched approximate descent and the
+    serving-head retrieval program on the production mesh."""
     out = {}
-    w, b = 16, 8
+    w = 16
     n_series, length = 1 << 20, 256            # 1M × 256 per-cell stand-in
-    db_abs = jax.ShapeDtypeStruct((n_series, length), jnp.float32)
-    dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
     with logical_rules(mesh, DEFAULT_RULES):
-        sh = NamedSharding(mesh, P(dp, None))
-        jb = jax.jit(build_step, static_argnums=(1, 2), in_shardings=(sh,))
-        lo = jb.lower(db_abs, w, b)
-        out["dumpy_build"] = lo.compile()
+        out["dumpy_build"] = lower_build_step(
+            mesh, n_series=n_series, length=length, w=w).compile()
+        out["dumpy_build_bottomup"] = lower_build_bottomup(
+            mesh, n_series=n_series, w=w).compile()
 
         L = 4096
-        q_abs = jax.ShapeDtypeStruct((64, length), jnp.float32)
-        lo_abs = jax.ShapeDtypeStruct((L, w), jnp.float32)
-        js = jax.jit(search_step, static_argnums=(4,),
-                     in_shardings=(None, sh, None, None))
-        lo2 = js.lower(q_abs, db_abs, lo_abs, lo_abs, 50)
-        out["dumpy_search"] = lo2.compile()
+        out["dumpy_search"] = lower_search_oneshot(
+            mesh, n_series=n_series, length=length, w=w, n_leaves=L,
+            k=50).compile()
 
         lo3 = lower_search_sharded(mesh, n_series=n_series, length=length,
                                    w=w, chunk=4096, n_leaves=L)
@@ -252,4 +335,10 @@ def dryrun_cells(mesh) -> dict:
         lo5 = lower_search_dtw(mesh, n_series=n_series, length=length,
                                w=w, n_leaves=L)
         out["dumpy_search_dtw"] = lo5.compile()
+
+        lo6 = lower_search_approx(mesh, n_series=n_series, length=length,
+                                  w=w, chunk=4096, n_leaves=L)
+        out["dumpy_search_approx"] = lo6.compile()
+
+        out["dumpy_serving_head"] = lower_serving_head(mesh).compile()
     return out

@@ -281,7 +281,11 @@ def _exact_knn_sharded(dev: DeviceIndex, prep: tuple, qs: jax.Array, *,
             def sub(b, c2):
                 topd, topi, st = c2
                 s0 = start + b * sub_w
-                slab = jax.lax.dynamic_slice(db_s, (s0, 0), (sub_w, n))
+                # pin the literal column index to int32: under an x64 env
+                # a bare 0 defaults to int64 and dynamic_slice rejects the
+                # mixed index dtypes (audit injection tests lower with x64)
+                slab = jax.lax.dynamic_slice(db_s, (s0, jnp.int32(0)),
+                                             (sub_w, n))
                 j = b * sub_w + jnp.arange(sub_w)           # slab-local rows
                 valid = (j >= w_lead[i]) & (j < w_lead[i] + w_size[i])
                 valid &= jax.lax.dynamic_slice(alive_s, (s0,), (sub_w,))
@@ -682,6 +686,31 @@ def _leaf_topk_device(dev: DeviceIndex, qs: jax.Array, prep: tuple,
     return idf, d2f, leaves
 
 
+@functools.partial(jax.jit, static_argnames=("k", "kk", "nbr", "metric"))
+def _approx_knn_device(dev: DeviceIndex, prep: tuple, sax_q: jax.Array,
+                       qs: jax.Array, *, k: int, kk: int, nbr: int,
+                       metric: Metric = ED
+                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """The whole approximate path as one device program (descent + leaf
+    scan): the jit entry point the compile-contract audit registers
+    (``repro.analysis.registry``).  Returns ``(ids [Q,k], d2 [Q,k],
+    leaves [Q,nbr])``; a degenerate tree (the root is the only leaf) routes
+    every query to leaf 0, exactly as the host path."""
+    lbq = ops.lb_paa_interval(prep[0], prep[1], dev.leaf_lo_g, dev.leaf_hi_g,
+                              dev.n)
+    if dev.node_lam.shape[0] == 0:   # degenerate tree: the root is the only leaf
+        routed = jnp.zeros(qs.shape[0], jnp.int32)
+    else:
+        edge_lb = ops.lb_paa_interval(prep[0], prep[1], dev.rt_lo, dev.rt_hi,
+                                      dev.n)
+        routed = _descend_device(
+            sax_q, dev.node_csl, dev.node_shift, dev.node_lam,
+            dev.rt_parent, dev.rt_sid, dev.rt_leaf, dev.rt_child,
+            edge_lb, depth=dev.depth)
+    return _leaf_topk_device(dev, qs, prep, lbq, routed, k=k, kk=kk,
+                             nbr=nbr, metric=metric)
+
+
 def approximate_search_device_batch(index: DumpyIndex, qs: np.ndarray, k: int,
                                     nbr: int = 1,
                                     dev: DeviceIndex | None = None,
@@ -706,25 +735,13 @@ def approximate_search_device_batch(index: DumpyIndex, qs: np.ndarray, k: int,
     qs_dev = jnp.asarray(qs)
     prep, sax_q = _prep_batch(met, qs_dev, sax_p.w, sax_p.b)
 
-    lbq = ops.lb_paa_interval(prep[0], prep[1], dev.leaf_lo_g, dev.leaf_hi_g,
-                              dev.n)
-    if dev.node_lam.shape[0] == 0:   # degenerate tree: the root is the only leaf
-        routed = jnp.zeros(len(qs), jnp.int32)
-    else:
-        edge_lb = ops.lb_paa_interval(prep[0], prep[1], dev.rt_lo, dev.rt_hi,
-                                      dev.n)
-        routed = _descend_device(
-            sax_q, dev.node_csl, dev.node_shift, dev.node_lam,
-            dev.rt_parent, dev.rt_sid, dev.rt_leaf, dev.rt_child,
-            edge_lb, depth=dev.depth)
-
     nbr = min(nbr, dev.n_leaves)
     # fuzzy replicas can share a leaf (sibling packing merges them), so merge
     # with the duplicate margin and segment-min-dedup on device
     kk = min(_result_margin(dev, k), nbr * dev.lmax)
     k_out = min(k, nbr * dev.lmax)
-    ids, d2, leaves = _leaf_topk_device(dev, qs_dev, prep, lbq, routed,
-                                        k=k_out, kk=kk, nbr=nbr, metric=met)
+    ids, d2, leaves = _approx_knn_device(dev, prep, sax_q, qs_dev,
+                                         k=k_out, kk=kk, nbr=nbr, metric=met)
     return (np.asarray(ids).astype(np.int64), np.sqrt(np.asarray(d2)),
             np.asarray(leaves))
 

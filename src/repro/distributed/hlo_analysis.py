@@ -4,6 +4,11 @@
 reduce-scatter / all-to-all / collective-permute in the compiled (partitioned)
 module — the §Roofline collective term numerator.  Async pairs are counted at
 the ``-start`` op only.
+
+The censuses below (``op_census``, ``dtype_census``, ``host_call_stats``,
+``control_flow_stats``) are the raw material of the compile-contract audit
+(``repro.analysis``): they turn a compiled module into the small set of
+counters whose drift a perf PR must declare (see ``docs/static_analysis.md``).
 """
 from __future__ import annotations
 
@@ -25,8 +30,22 @@ _OP_RE = re.compile(
     r"=\s*(?:\([^)]*\)|\S+)\s+"
     r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
     r"(-start|-done)?\(")
-_OPERAND_RE = re.compile(r"\(([^)]*)\)")
 _NAME_RE = re.compile(r"%[\w.\-]+")
+
+
+def _call_operands(line: str, open_paren: int) -> str:
+    """The call's operand list, by balanced-paren walk from ``open_paren``
+    (tuple-typed operand annotations nest parens, so a naive ``[^)]*``
+    match would cut the list short of the operand names)."""
+    depth = 0
+    for j in range(open_paren, len(line)):
+        if line[j] == "(":
+            depth += 1
+        elif line[j] == ")":
+            depth -= 1
+            if depth == 0:
+                return line[open_paren + 1:j]
+    return line[open_paren + 1:]
 
 
 def _shape_bytes(dtype: str, dims: str) -> int:
@@ -60,11 +79,9 @@ def collective_stats(hlo_text: str) -> dict:
         if not m or m.group(2) == "-done":
             continue
         kind = m.group(1)
-        om = _OPERAND_RE.search(line[m.end() - 1:])
         b = 0
-        if om:
-            for name in _NAME_RE.findall(om.group(1)):
-                b += sizes.get(name, 0)
+        for name in _NAME_RE.findall(_call_operands(line, m.end() - 1)):
+            b += sizes.get(name, 0)
         if b == 0:  # fall back to the result type on the def line itself
             dm = _DEF_RE.match(line)
             if dm:
@@ -75,11 +92,69 @@ def collective_stats(hlo_text: str) -> dict:
     return {"per_kind": dict(stats), "total_bytes": total}
 
 
-def op_census(hlo_text: str, top: int = 15) -> list[tuple[str, int]]:
-    """Most frequent HLO opcodes — remat/redundancy smoke signal."""
+def op_census(hlo_text: str, top: int | None = 15) -> list[tuple[str, int]]:
+    """Most frequent HLO opcodes — remat/redundancy smoke signal.
+    ``top=None`` returns the full census (the audit's golden granularity)."""
     counts: dict[str, int] = defaultdict(int)
     for line in hlo_text.splitlines():
         m = re.search(r"=\s*(?:\([^)]*\)|\S+)\s+([a-z][a-z0-9-]*)\(", line)
         if m:
             counts[m.group(1)] += 1
-    return sorted(counts.items(), key=lambda kv: -kv[1])[:top]
+    ranked = sorted(counts.items(), key=lambda kv: (-kv[1], kv[0]))
+    return ranked if top is None else ranked[:top]
+
+
+def dtype_census(hlo_text: str) -> dict:
+    """Count of op *results* per element dtype (every shape on a def line's
+    type, tuple elements included).  An f64 weak-type promotion or a stray
+    wide accumulator shows up here as an ``f64`` key — device search paths
+    must never have one (``repro.analysis.contracts`` policy)."""
+    counts: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        dm = _DEF_RE.match(line)
+        if not dm:
+            continue
+        for dt, _ in _SHAPE_RE.findall(dm.group(2)):
+            counts[dt] += 1
+    return dict(counts)
+
+
+#: custom-call targets that re-enter the host Python runtime (jax.pure_callback
+#: / io_callback / debug.print lower to these) — a device program containing
+#: one round-trips to the host on every execution.
+_HOST_CALLBACK_RE = re.compile(
+    r"custom_call_target=\"[^\"]*(?:python_cpu_callback|python_gpu_callback"
+    r"|py_func|CallbackToHost|xla_call_module_host)[^\"]*\"")
+
+
+def host_call_stats(hlo_text: str) -> dict:
+    """Host round-trips of a compiled module: infeed/outfeed ops, host
+    callback custom-calls, and the full custom-call target census (backends
+    legitimately lower sort/top-k to custom-calls — only the callback-flavored
+    targets count as host traffic)."""
+    infeed = outfeed = callbacks = 0
+    targets: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        if re.search(r"=\s*(?:\([^)]*\)|\S+)\s+infeed\(", line):
+            infeed += 1
+        if re.search(r"=\s*(?:\([^)]*\)|\S+)\s+outfeed\(", line):
+            outfeed += 1
+        for m in re.finditer(r"custom_call_target=\"([^\"]+)\"", line):
+            targets[m.group(1)] += 1
+        if _HOST_CALLBACK_RE.search(line):
+            callbacks += 1
+    return {"infeed": infeed, "outfeed": outfeed,
+            "host_callbacks": callbacks, "custom_call_targets": dict(targets)}
+
+
+def control_flow_stats(hlo_text: str) -> dict:
+    """``while`` / ``conditional`` op counts — the program's dynamic-control
+    surface (an unexpected extra while loop usually means a pruning loop
+    stopped fusing or a new device loop appeared)."""
+    w = c = 0
+    for line in hlo_text.splitlines():
+        if re.search(r"=\s*(?:\([^)]*\)|\S+)\s+while\(", line):
+            w += 1
+        if re.search(r"=\s*(?:\([^)]*\)|\S+)\s+conditional\(", line):
+            c += 1
+    return {"while": w, "conditional": c}

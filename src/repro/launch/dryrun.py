@@ -184,67 +184,46 @@ def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str,
 
 def lower_dumpy_cell(mesh, mesh_name: str, kind: str) -> dict:
     """The paper's own technique on the production mesh: distributed index
-    build (Stage 1 + root histogram), the one-shot sharded search, the
-    DeviceIndex sharded windowed-pruning search (per-shard span loop +
-    all-gather top-k merge with in-merge dedup), and the sharded extended
-    (Alg. 4) search (root→subtree descent + sibling leaf schedule +
-    shard-local scan)."""
-    import jax.numpy as jnp
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    from repro.core.distributed import build_step, search_step
+    build (Stage 1 + root histogram, and the bottom-up grouping program), the
+    one-shot sharded search, the DeviceIndex sharded windowed-pruning search
+    (per-shard span loop + all-gather top-k merge with in-merge dedup), the
+    sharded extended (Alg. 4) search (root→subtree descent + sibling leaf
+    schedule + shard-local scan), the batched approximate descent, and the
+    serving-head retrieval program.  The same ``lower_*`` helpers back the
+    compile-contract audit registry (``repro.analysis.registry``)."""
+    from repro.core import distributed as D
     from repro.distributed.sharding import logical_rules
 
-    w, b = 16, 8
+    w = 16
     n_series, length = 1 << 22, 256          # 4M × 256 f32 = 4 GB collection
-    db_abs = jax.ShapeDtypeStruct((n_series, length), jnp.float32)
-    dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
-    sh = NamedSharding(mesh, P(dp, None))
+    lowerers = {
+        "build": lambda: D.lower_build_step(
+            mesh, n_series=n_series, length=length, w=w),
+        "build_bottomup": lambda: D.lower_build_bottomup(
+            mesh, n_series=n_series, w=w),
+        "search": lambda: D.lower_search_oneshot(
+            mesh, n_series=n_series, length=length, w=w),
+        "search_sharded": lambda: D.lower_search_sharded(
+            mesh, n_series=n_series, length=length, w=w),
+        "search_extended": lambda: D.lower_search_extended(
+            mesh, n_series=n_series, length=length, w=w),
+        "search_dtw": lambda: D.lower_search_dtw(
+            mesh, n_series=n_series, length=length, w=w),
+        "search_approx": lambda: D.lower_search_approx(
+            mesh, n_series=n_series, length=length, w=w),
+        "serving": lambda: D.lower_serving_head(mesh),
+    }
     with logical_rules(mesh):
-        if kind == "build":
-            jitted = jax.jit(build_step, static_argnums=(1, 2),
-                             in_shardings=(sh,))
-            t0 = time.time()
-            lowered = jitted.lower(db_abs, w, b)
-            compiled = lowered.compile()
-            t_compile = time.time() - t0
-        elif kind == "search_sharded":
-            from repro.core.distributed import lower_search_sharded
-            t0 = time.time()
-            lowered = lower_search_sharded(mesh, n_series=n_series,
-                                           length=length, w=w)
-            compiled = lowered.compile()
-            t_compile = time.time() - t0
-        elif kind == "search_extended":
-            from repro.core.distributed import lower_search_extended
-            t0 = time.time()
-            lowered = lower_search_extended(mesh, n_series=n_series,
-                                            length=length, w=w)
-            compiled = lowered.compile()
-            t_compile = time.time() - t0
-        elif kind == "search_dtw":
-            from repro.core.distributed import lower_search_dtw
-            t0 = time.time()
-            lowered = lower_search_dtw(mesh, n_series=n_series,
-                                       length=length, w=w)
-            compiled = lowered.compile()
-            t_compile = time.time() - t0
-        else:
-            L = 16384
-            q_abs = jax.ShapeDtypeStruct((64, length), jnp.float32)
-            lo_abs = jax.ShapeDtypeStruct((L, w), jnp.float32)
-            jitted = jax.jit(search_step, static_argnums=(4,),
-                             in_shardings=(None, sh, None, None))
-            t0 = time.time()
-            lowered = jitted.lower(q_abs, db_abs, lo_abs, lo_abs, 50)
-            compiled = lowered.compile()
-            t_compile = time.time() - t0
+        t0 = time.time()
+        compiled = lowerers[kind]().compile()
+        t_compile = time.time() - t0
     mem = compiled.memory_analysis()
     hlo = compiled.as_text()
     lc = hlo_cost.analyze(hlo)
     # model flops: build = PAA matmul 2·N·n·w; both search variants are
     # bounded by the distance matmul 2·Q·N·n (the sharded loop does less
     # when pruning engages; the dry-run cannot know the trip count)
-    mf = (2.0 * n_series * length * w if kind == "build"
+    mf = (2.0 * n_series * length * w if kind.startswith("build")
           else 2.0 * 64 * n_series * length)
     rl = roofline.analyze(flops_per_device=lc.flops,
                           bytes_per_device=lc.hbm_bytes,
@@ -282,8 +261,9 @@ def main() -> None:
                       "both": [False, True]}[args.mesh]:
             mesh_name = "multi_pod_2x16x16" if multi else "pod_16x16"
             mesh = make_production_mesh(multi_pod=multi)
-            for kind in ("build", "search", "search_sharded",
-                         "search_extended", "search_dtw"):
+            for kind in ("build", "build_bottomup", "search",
+                         "search_sharded", "search_extended", "search_dtw",
+                         "search_approx", "serving"):
                 rec = lower_dumpy_cell(mesh, mesh_name, kind)
                 path = os.path.join(args.out, f"dumpy-{kind}__{mesh_name}.json")
                 os.makedirs(args.out, exist_ok=True)

@@ -1,0 +1,183 @@
+"""The repo-hazard AST linter (``repro.analysis.lint``): every rule fires on
+a minimal bad snippet and stays quiet on the idiomatic fix — including the
+exact unsynced-benchmark-timing pattern the PR fixed in ``benchmarks/``."""
+from pathlib import Path
+
+from repro.analysis.lint import lint_paths, lint_source
+
+
+def _rules(src: str) -> list[str]:
+    return [f.rule for f in lint_source(src)]
+
+
+def test_if_on_tracer_flagged():
+    src = """
+import jax
+@jax.jit
+def f(x):
+    if x:
+        return x
+    return -x
+"""
+    assert _rules(src) == ["JX001"]
+
+
+def test_while_on_tracer_flagged_through_partial():
+    src = """
+import functools, jax
+@functools.partial(jax.jit, static_argnames=("n",))
+def f(x, n):
+    while x:
+        x = x - n
+    return x
+"""
+    assert _rules(src) == ["JX001"]
+
+
+def test_static_args_and_attributes_not_flagged():
+    """Static params, ``dev.chunk``-style aux metadata, ``x.shape`` and
+    ``x is None`` tests are all trace-time constants — no findings."""
+    src = """
+import functools, jax
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
+def f(dev, qs, mask, k, metric):
+    if k > 3:
+        pass
+    if dev.chunk > qs.shape[0]:
+        pass
+    if mask is not None:
+        pass
+    while metric:
+        break
+    return qs
+"""
+    assert _rules(src) == []
+
+
+def test_static_argnums_positions_resolve():
+    src = """
+import functools, jax
+@functools.partial(jax.jit, static_argnums=(1,))
+def f(x, n):
+    if n > 2:
+        return x
+    if x:
+        return x
+"""
+    assert _rules(src) == ["JX001"]       # only the `if x`, not `if n`
+
+
+def test_numpy_under_jit_flagged():
+    src = """
+import jax
+import numpy as np
+@jax.jit
+def f(x):
+    return np.sum(x)
+"""
+    assert _rules(src) == ["JX002"]
+
+
+def test_unhashable_static_flagged():
+    src = """
+import functools, jax
+@functools.partial(jax.jit, static_argnames=("opts",))
+def f(x, opts=[1, 2]):
+    return x
+"""
+    assert _rules(src) == ["JX003"]
+
+
+def test_concretization_and_len_flagged():
+    src = """
+import jax
+@jax.jit
+def f(x):
+    a = float(x)
+    b = len(x)
+    return a + b
+"""
+    assert sorted(_rules(src)) == ["JX004", "JX005"]
+
+
+def test_len_of_static_ok():
+    src = """
+import functools, jax
+@functools.partial(jax.jit, static_argnames=("names",))
+def f(x, names):
+    return x[: len(names)]
+"""
+    assert _rules(src) == []
+
+
+def test_unjitted_function_ignored():
+    src = """
+import numpy as np
+def f(x):
+    if x:
+        return float(np.sum(x))
+"""
+    assert _rules(src) == []
+
+
+# ---------------------------------------------------------------------------
+# JX006: the benchmark-timing hazard this PR fixed
+# ---------------------------------------------------------------------------
+
+#: verbatim shape of the pre-fix ``bench_batch_search._time`` — the linter
+#: must catch exactly this (satellite contract, ISSUE 8)
+OLD_TIME = """
+import time
+def _time(fn, repeat=3):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        fn()
+    return (time.perf_counter() - t0) / repeat
+"""
+
+FIXED_TIME = """
+import time, jax
+def _time(fn, repeat=3):
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeat
+"""
+
+
+def test_unsynced_timing_window_flagged():
+    assert _rules(OLD_TIME) == ["JX006"]
+
+
+def test_synced_timing_window_ok():
+    assert _rules(FIXED_TIME) == []
+
+
+def test_timing_suppression_comment():
+    src = OLD_TIME.replace(
+        "    t0 = time.perf_counter()",
+        "    # lint: allow-timing — host-only window\n"
+        "    t0 = time.perf_counter()", 1)
+    assert _rules(src) == []
+
+
+def test_single_perf_counter_not_a_window():
+    src = """
+import time
+def stamp():
+    return time.perf_counter()
+"""
+    assert _rules(src) == []
+
+
+# ---------------------------------------------------------------------------
+# the tree itself is clean (this is the verify.sh gate, run in-process)
+# ---------------------------------------------------------------------------
+
+def test_repo_tree_is_lint_clean():
+    root = Path(__file__).resolve().parents[1]
+    findings = lint_paths([root / "src" / "repro", root / "benchmarks"])
+    assert findings == [], "\n".join(map(str, findings))

@@ -1,0 +1,87 @@
+"""The recompile guard (``repro.analysis.recompile``): the k/nbr/metric/batch
+sweep over the public batched search entry points must be steady-state on
+its second pass, and the gate must trip when a wrapper defeats the jit
+cache (acceptance criterion (c) of ISSUE 8)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis.recompile import (CompileCounter, RecompileViolation,
+                                      run_sweep, verify_sweep)
+from repro.core.build import DumpyParams
+from repro.core.index import DumpyIndex
+from repro.core.sax import SaxParams
+from repro.core.split import SplitParams
+from repro.data.series import random_walks
+
+
+@pytest.fixture(scope="module")
+def small_index():
+    db = random_walks(1500, 64, seed=11)
+    p = DumpyParams(sax=SaxParams(w=8, b=8), split=SplitParams(th=128))
+    return DumpyIndex.build(db, p)
+
+
+def test_compile_counter_counts_and_restores():
+    def f(x):
+        return x * 2 + 1
+
+    with CompileCounter() as c:
+        jax.jit(f)(np.float32(3.0))          # cold: compiles
+        jax.jit(f)(np.float32(4.0))          # warm: cache hit
+    assert c.count == 1
+    assert len(c.names) == 1
+    from jax._src import compiler
+    assert compiler.compile_or_get_cached.__name__ != "counted"  # restored
+
+
+def test_compile_counter_shape_change_recompiles():
+    def g(x):
+        return x.sum()
+
+    with CompileCounter() as c:
+        jg = jax.jit(g)
+        jg(np.ones((4,), np.float32))
+        jg(np.ones((8,), np.float32))        # new shape → new executable
+    assert c.count == 2
+
+
+def test_sweep_steady_state(small_index):
+    rep = run_sweep(small_index, ks=(3, 5), nbrs=(2,), metrics=("ed", "dtw"),
+                    batches=(2, 4))
+    assert rep.second_pass == 0, rep.second_pass_names
+    assert 0 < rep.first_pass <= rep.budget
+    verify_sweep(rep)                        # does not raise
+
+
+def test_gate_trips_on_fresh_jit_per_call(small_index):
+    """Patch in an exact-search wrapper that builds a new jit cache every
+    call (the classic 'lambda in the hot path' regression): the warm pass
+    recompiles and the gate must raise."""
+    from repro.core import search_device as sd
+
+    def leaky_exact(index, qs, k, metric="ed"):
+        dev = index.device_index()
+        prep, _ = sd._prep_batch(
+            sd.resolve(metric, index.db.shape[1]),
+            sd.jnp.asarray(np.ascontiguousarray(qs, np.float32)),
+            index.params.sax.w, index.params.sax.b)
+        fresh = jax.jit(lambda d, p, q: sd._exact_knn_sharded(
+            d, p, q, k=k, metric=sd.resolve(metric, index.db.shape[1])))
+        return fresh(dev, prep, sd.jnp.asarray(
+            np.ascontiguousarray(qs, np.float32)))
+
+    with pytest.raises(RecompileViolation, match="recompile"):
+        verify_sweep(index=small_index, ks=(3,), nbrs=(2,), metrics=("ed",),
+                     batches=(2,), exact_fn=leaky_exact)
+
+
+def test_gate_trips_on_budget_blowout(small_index):
+    """A cold pass past the declared budget (hidden per-call specialization)
+    must also raise, even if the second pass is clean."""
+    from repro.analysis.recompile import SweepReport
+
+    rep = SweepReport(first_pass=10_000, second_pass=0, budget=96,
+                      combos=12, second_pass_names=())
+    with pytest.raises(RecompileViolation, match="budget"):
+        verify_sweep(rep)

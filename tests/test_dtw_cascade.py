@@ -22,6 +22,10 @@ from repro.core.search_device import exact_search_device_batch
 from repro.core.split import SplitParams
 from repro.data.series import random_walks
 
+# device-path promise: no implicit host<->device transfers (conftest guard;
+# the subprocess tests are unaffected — the guard is per-process)
+pytestmark = pytest.mark.guard_transfers
+
 PARAMS = DumpyParams(sax=SaxParams(w=8, b=8), split=SplitParams(th=64))
 FUZZY = DumpyParams(sax=SaxParams(w=8, b=8), split=SplitParams(th=64),
                     fuzzy_f=0.15)
@@ -31,6 +35,7 @@ FUZZY = DumpyParams(sax=SaxParams(w=8, b=8), split=SplitParams(th=64),
 # LB_Improved properties
 # ---------------------------------------------------------------------------
 
+@pytest.mark.guard_transfers(False)   # eager call into jit internals
 def test_window_minmax_exact():
     rng = np.random.default_rng(0)
     for n in (7, 17, 64):
@@ -46,6 +51,7 @@ def test_window_minmax_exact():
             np.testing.assert_allclose(gmin, rmin, rtol=0, atol=0)
 
 
+@pytest.mark.guard_transfers(False)   # eager call into jit internals
 @pytest.mark.parametrize("band", [1, 3, 6, 12])
 def test_lb_improved_bounds_dtw_dominates_keogh(band):
     """On random walks: LB_Keogh² ≤ LB_Improved² ≤ DTW², at every band."""
@@ -64,6 +70,7 @@ def test_lb_improved_bounds_dtw_dominates_keogh(band):
     assert (lbi2 > lbk2 + 1e-6).any()
 
 
+@pytest.mark.guard_transfers(False)   # eager call into jit internals
 def test_lb_improved_gather_layout_matches_shared():
     """The [Q, m, n] per-query layout equals per-query calls of the shared
     [m, n] layout."""
@@ -81,6 +88,7 @@ def test_lb_improved_gather_layout_matches_shared():
         np.testing.assert_array_equal(got[q], ref)
 
 
+@pytest.mark.guard_transfers(False)   # eager call into jit internals
 def test_ops_lb_improved_kernel_matches_jnp():
     from repro.kernels import lb_keogh as lbk_mod, ops
     rng = np.random.default_rng(1)

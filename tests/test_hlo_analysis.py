@@ -1,0 +1,111 @@
+"""Unit tests for the regex-based HLO text analyses backing the
+compile-contract audit (``distributed/hlo_analysis.py``): canned snippets
+covering async ``-start``/``-done`` pairs, ROOT ops, tuple-typed results,
+unknown dtypes, and the census helpers added for ``repro.analysis``."""
+from repro.distributed.hlo_analysis import (collective_stats,
+                                            control_flow_stats, dtype_census,
+                                            host_call_stats, op_census)
+
+# A hand-written module exercising every parse path.  Shapes are chosen so
+# byte math is easy: f32[8,128] = 4096 B, f32[64,128] = 32768 B,
+# u8[256] = 256 B, s32[2^16] = 262144 B.
+CANNED = """\
+HloModule canned, input_output_alias={ {0}: (0, {}, may-alias) }
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(f32[] %a, f32[] %b)
+}
+
+ENTRY %main {
+  %p0 = f32[8,128]{1,0} parameter(0)
+  %p1 = s32[65536]{0} parameter(1)
+  %ag-start = (f32[8,128]{1,0}, f32[64,128]{1,0}) all-gather-start(f32[8,128]{1,0} %p0), dimensions={0}
+  %ag-done = f32[64,128]{1,0} all-gather-done((f32[8,128]{1,0}, f32[64,128]{1,0}) %ag-start)
+  %hist = u8[256]{0} convert(s32[65536]{0} %p1)
+  %cp = u8[256]{0} collective-permute(u8[256]{0} %hist), source_target_pairs={{0,1}}
+  %odd = u4[16]{0} bitcast-convert(u8[256]{0} %hist)
+  %w = f32[64,128]{1,0} while(f32[64,128]{1,0} %ag-done), condition=%c, body=%bdy
+  %pred0 = pred[] constant(true)
+  %cond = f32[8,128]{1,0} conditional(pred[] %pred0, f32[8,128]{1,0} %p0, f32[8,128]{1,0} %p0), true_computation=%t, false_computation=%f
+  %topk = (f32[8,10]{1,0}, s32[8,10]{1,0}) custom-call(f32[8,128]{1,0} %p0), custom_call_target="TopK"
+  %cb = f32[8]{0} custom-call(f32[8,128]{1,0} %p0), custom_call_target="xla_python_cpu_callback"
+  ROOT %ar = f32[64,128]{1,0} all-reduce(f32[64,128]{1,0} %w), to_apply=%add
+}
+"""
+
+
+def test_collective_async_pair_counted_once_at_start():
+    st = collective_stats(CANNED)
+    ag = st["per_kind"]["all-gather"]
+    assert ag["count"] == 1                       # -done is skipped
+    assert ag["bytes"] == 8 * 128 * 4             # operand %p0, not the tuple
+
+
+def test_collective_root_op_counted():
+    st = collective_stats(CANNED)
+    ar = st["per_kind"]["all-reduce"]
+    assert ar["count"] == 1                       # ROOT prefix parses
+    assert ar["bytes"] == 64 * 128 * 4            # operand %w
+
+
+def test_collective_total_and_small_kinds():
+    st = collective_stats(CANNED)
+    cp = st["per_kind"]["collective-permute"]
+    assert cp == {"count": 1, "bytes": 256}
+    assert st["total_bytes"] == 8 * 128 * 4 + 64 * 128 * 4 + 256
+    assert "reduce-scatter" not in st["per_kind"]
+
+
+def test_tuple_typed_symbol_table():
+    """The async start's own def is tuple-typed; a collective consuming it
+    by name must get the summed tuple bytes."""
+    tup = ("%x = f32[4]{0} parameter(0)\n"
+           "%pair = (f32[8,128]{1,0}, f32[64,128]{1,0}) all-gather-start(f32[4]{0} %x)\n"
+           "%ar2 = f32[4]{0} all-reduce((f32[8,128]{1,0}, f32[64,128]{1,0}) %pair)\n")
+    st = collective_stats(tup)
+    assert st["per_kind"]["all-reduce"]["bytes"] == (8 * 128 + 64 * 128) * 4
+
+
+def test_unknown_dtype_defaults_to_four_bytes():
+    st = collective_stats("%q = u4[16]{0} parameter(0)\n"
+                          "%r = u4[16]{0} all-reduce(u4[16]{0} %q)\n")
+    # u4 is not in the dtype table — documented 4-byte/elem fallback
+    assert st["per_kind"]["all-reduce"]["bytes"] == 16 * 4
+
+
+def test_op_census_full_and_top():
+    full = dict(op_census(CANNED, top=None))
+    assert full["parameter"] == 4                 # %p0 %p1 %a %b
+    assert full["all-gather-start"] == 1 and full["all-gather-done"] == 1
+    assert full["custom-call"] == 2
+    top1 = op_census(CANNED, top=1)
+    assert len(top1) == 1 and top1[0][0] == "parameter"
+
+
+def test_dtype_census_counts_tuple_elements():
+    dc = dtype_census(CANNED)
+    assert dc["u4"] == 1
+    assert dc["u8"] == 2                          # %hist, %cp
+    assert dc["pred"] == 1
+    assert dc["s32"] == 2                         # %p1 + topk tuple elem
+    assert "f64" not in dc
+    # tuple defs contribute every element: ag-start (2×f32) + topk (f32+s32)
+    assert dc["f32"] == 4 + 2 + 1 + 2 + 1 + 1 + 1  # see CANNED defs
+
+
+def test_host_call_stats_separates_callbacks_from_backend_calls():
+    hc = host_call_stats(CANNED)
+    assert hc["host_callbacks"] == 1              # xla_python_cpu_callback
+    assert hc["custom_call_targets"] == {"TopK": 1,
+                                         "xla_python_cpu_callback": 1}
+    assert hc["infeed"] == 0 and hc["outfeed"] == 0
+    hc2 = host_call_stats("%i = (f32[2]{0}, token[]) infeed(token[] %tok)\n"
+                          "%o = token[] outfeed(f32[2]{0} %x, token[] %tok)\n")
+    assert hc2["infeed"] == 1 and hc2["outfeed"] == 1
+
+
+def test_control_flow_stats():
+    cf = control_flow_stats(CANNED)
+    assert cf == {"while": 1, "conditional": 1}

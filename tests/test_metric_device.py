@@ -27,6 +27,10 @@ from repro.core.search_device import (approximate_search_device_batch,
 from repro.core.split import SplitParams
 from repro.data.series import random_walks
 
+# device-path promise: no implicit host<->device transfers (conftest guard;
+# the subprocess tests are unaffected — the guard is per-process)
+pytestmark = pytest.mark.guard_transfers
+
 PARAMS = DumpyParams(sax=SaxParams(w=8, b=8), split=SplitParams(th=64))
 FUZZY = DumpyParams(sax=SaxParams(w=8, b=8), split=SplitParams(th=64),
                     fuzzy_f=0.15)
@@ -198,6 +202,7 @@ def test_stop_span_cap_bounds_every_schedule(built):
         assert cap == widths.max()
 
 
+@pytest.mark.guard_transfers(False)   # eager call into jit internals
 def test_sibling_schedule_window_bitwise_equals_full_sort(built):
     """The span-cap window branch of ``_sibling_schedule`` must produce the
     exact same schedule/results as the full-width sort whenever the window

@@ -12,6 +12,9 @@ from repro.core.search_device import exact_search_device
 from repro.core.split import SplitParams
 from repro.data.series import random_walks
 
+# device-path promise: no implicit host<->device transfers (conftest guard)
+pytestmark = pytest.mark.guard_transfers
+
 PARAMS = DumpyParams(sax=SaxParams(w=8, b=8), split=SplitParams(th=128))
 
 
