@@ -12,7 +12,12 @@
 #      Undeclared drift fails; intended drift is re-blessed with --update
 #      and declared in the PR (docs/static_analysis.md).
 #   3. pytest — the full offline suite.
-#   4. bench smokes (--quick, no baseline updates): the batched-search smoke
+#   4. repro.robustness.smoke — fault-injection smoke: a save crashed at
+#      the commit failpoint must recover through the previous generation's
+#      write-ahead log, and a 4-way sharded search with one dead shard must
+#      report exact coverage with results bitwise equal to the restricted
+#      host search (docs/robustness.md).
+#   5. bench smokes (--quick, no baseline updates): the batched-search smoke
 #      (DeviceIndex serving paths end-to-end — exact, approximate, the
 #      extended (Alg. 4) nbr sweep with recall@k, and the DTW metric smoke,
 #      which asserts the LB_Keogh → LB_Improved → band-DP cascade fires at
@@ -25,5 +30,6 @@ cd "$(dirname "$0")/.."
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m repro.analysis.lint
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m repro.analysis.audit
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m repro.robustness.smoke
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.bench_batch_search --quick
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.bench_build --quick

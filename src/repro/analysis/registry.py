@@ -76,6 +76,11 @@ def _make_entries() -> tuple[Entry, ...]:
               "LB-sorted candidate walk — the serving default)",
               lambda mesh: D.lower_search_dtw(
                   mesh, **s, k=k, q_batch=qb, order="cluster")),
+        Entry("search_exact_ed_degraded",
+              "degraded-mode sharded exact ED kNN: one dead shard masked "
+              "out of the all-gather merge (static shard_health)",
+              lambda mesh: D.lower_search_degraded(
+                  mesh, **s, k=k, q_batch=qb)),
         Entry("search_extended",
               "sharded extended (Alg. 4) search: subtree descent + sibling "
               "schedule + shard-local leaf scan",

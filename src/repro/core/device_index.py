@@ -72,7 +72,7 @@ _SHARDED_FIELDS = frozenset({
 })
 _META_FIELDS = ("n", "w", "chunk", "depth", "lmax", "total",
                 "has_duplicates", "max_replica", "row_bounds",
-                "gmax", "leaf_bounds")
+                "gmax", "leaf_bounds", "shard_health")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,11 +127,23 @@ class DeviceIndex:
     row_bounds: tuple      # S+1 ordered-row cuts (leaf-aligned, host ints)
     gmax: int              # max distinct children of any internal node
     leaf_bounds: tuple     # S+1 leaf-id cuts matching row_bounds
+    # ``None`` = all shards healthy (the canonical form — searches lower
+    # byte-identically to the pre-degraded programs); a tuple of S bools
+    # masks dead shards out of every merge (docs/robustness.md).  Static
+    # aux data, not an array: health changes are rare, and keeping it out
+    # of the children means the all-healthy jit cache entries never churn.
+    shard_health: tuple | None = None
 
     # -- shapes --------------------------------------------------------------
     @property
     def n_shards(self) -> int:
         return self.db.shape[0]
+
+    @property
+    def n_live_shards(self) -> int:
+        if self.shard_health is None:
+            return self.n_shards
+        return sum(bool(h) for h in self.shard_health)
 
     @property
     def shard_rows(self) -> int:
@@ -325,6 +337,25 @@ class DeviceIndex:
         return jax.device_put(self, self.shardings(mesh, axes))
 
     # -- incremental state ---------------------------------------------------
+    def with_shard_health(self, health) -> "DeviceIndex":
+        """Mark shards dead/alive for degraded-mode search.  ``health`` is a
+        length-``n_shards`` boolean sequence (or ``None`` to clear); all-True
+        canonicalizes to ``None`` so the healthy index is a single static
+        state and healthy searches reuse their existing compiled programs."""
+        if health is None:
+            return dataclasses.replace(self, shard_health=None)
+        health = tuple(bool(h) for h in health)
+        if len(health) != self.n_shards:
+            raise ValueError(
+                f"shard_health has {len(health)} entries for "
+                f"{self.n_shards} shards")
+        if not any(health):
+            raise ValueError("shard_health marks every shard dead — "
+                             "no data left to search")
+        if all(health):
+            health = None
+        return dataclasses.replace(self, shard_health=health)
+
     def with_alive(self, alive_by_id: np.ndarray) -> "DeviceIndex":
         """Re-derive the padded tombstone mask from the host per-id ``alive``
         vector (deletions/undeletions without rebuilding the layout).  Every
@@ -356,7 +387,8 @@ jax.tree_util.register_pytree_node(DeviceIndex, _flatten, _unflatten)
 def abstract_device_index(n_series: int, length: int, w: int, *,
                           n_shards: int = 1, chunk: int = 4096,
                           n_leaves: int = 4096, lam_max: int = 4,
-                          depth: int = 8, gmax: int = 64) -> DeviceIndex:
+                          depth: int = 8, gmax: int = 64,
+                          shard_health: tuple | None = None) -> DeviceIndex:
     """A ShapeDtypeStruct-leaved DeviceIndex for lower/compile dry-runs:
     equal-sized leaves, evenly divided shards (no data, shapes only)."""
     S = max(int(n_shards), 1)
@@ -399,4 +431,5 @@ def abstract_device_index(n_series: int, length: int, w: int, *,
         row_bounds=tuple(min(s * Tp, n_series) for s in range(S + 1)),
         gmax=gmax,
         leaf_bounds=tuple(min(s * Ls, n_leaves) for s in range(S + 1)),
+        shard_health=shard_health,
     )

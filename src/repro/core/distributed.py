@@ -104,8 +104,7 @@ def build_distributed(db: np.ndarray, params: DumpyParams | None = None
 
 def search_distributed(index: DumpyIndex, queries: np.ndarray, k: int,
                        nbr: int | None = None, metric: str = "ed",
-                       band: int | None = None
-                       ) -> tuple[np.ndarray, np.ndarray]:
+                       band: int | None = None, shard_health=None):
     """Sharded kNN: a thin wrapper over the DeviceIndex search paths.
 
     Under a mesh with a ``data`` axis the index shards leaf-aligned over it
@@ -117,20 +116,28 @@ def search_distributed(index: DumpyIndex, queries: np.ndarray, k: int,
     leaves).  ``metric``/``band`` select the distance (``"ed"`` or banded
     ``"dtw"``, band defaulting to 10% of the length) — both paths run on
     device for either metric.  Both inherit tombstones and the in-merge
-    fuzzy dedup."""
+    fuzzy dedup.
+
+    ``shard_health`` (length-``n_shards`` bools) runs degraded: dead shards
+    are masked from the merge and the return becomes ``(ids, d, coverage)``
+    with ``coverage`` the live-series fraction still reachable."""
     from .search_device import (exact_search_device_batch,
                                 extended_search_device_batch)
     mesh = get_mesh()
     if mesh is not None and "data" not in mesh.axis_names:
         mesh = None
     if nbr is not None:
-        ids, d, _ = extended_search_device_batch(index, queries, k,
-                                                 nbr=nbr, mesh=mesh,
-                                                 metric=metric, band=band)
+        res = extended_search_device_batch(index, queries, k,
+                                           nbr=nbr, mesh=mesh,
+                                           metric=metric, band=band,
+                                           shard_health=shard_health)
     else:
-        ids, d, _ = exact_search_device_batch(index, queries, k, mesh=mesh,
-                                              metric=metric, band=band)
-    return ids, d
+        res = exact_search_device_batch(index, queries, k, mesh=mesh,
+                                        metric=metric, band=band,
+                                        shard_health=shard_health)
+    if shard_health is not None:
+        return res[0], res[1], res[-1]
+    return res[0], res[1]
 
 
 def _abstract_prep(q_batch: int, w: int, length: int):
@@ -144,13 +151,15 @@ def _abstract_prep(q_batch: int, w: int, length: int):
 def lower_search_sharded(mesh, *, n_series: int = 1 << 22, length: int = 256,
                          w: int = 16, chunk: int = 8192,
                          n_leaves: int = 16384, k: int = 58,
-                         q_batch: int = 64, metric=None):
+                         q_batch: int = 64, metric=None,
+                         shard_health: tuple | None = None):
     """Lower the DeviceIndex sharded windowed search on ``mesh`` with
     production shardings (shared by both dry-run entry points).  ``metric``
     (a ``core.metric.Metric``; default ED) selects the specialization —
     ``Metric("dtw", band)`` lowers the fused masked band-DP program.
-    Returns the jax ``Lowered`` object; callers ``.compile()`` and harvest
-    analyses."""
+    ``shard_health`` lowers the degraded-mode specialization (dead shards
+    masked before the all-gather merge).  Returns the jax ``Lowered``
+    object; callers ``.compile()`` and harvest analyses."""
     from .device_index import abstract_device_index
     from .metric import ED
     from .search_device import (_exact_knn_lane_sharded, _exact_knn_sharded,
@@ -160,7 +169,8 @@ def lower_search_sharded(mesh, *, n_series: int = 1 << 22, length: int = 256,
     dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
     dev_abs = abstract_device_index(n_series, length, w,
                                     n_shards=_mesh_shards(mesh),
-                                    chunk=chunk, n_leaves=n_leaves)
+                                    chunk=chunk, n_leaves=n_leaves,
+                                    shard_health=shard_health)
     # the same program selection as exact_search_device_batch: DTW with a
     # per-query candidate ordering lowers the lane program
     knn = _exact_knn_lane_sharded if (met.is_dtw and met.order != "shared") \
@@ -196,6 +206,24 @@ def lower_search_dtw(mesh, *, n_series: int = 1 << 22, length: int = 256,
         metric=Metric("dtw",
                       band if band is not None else default_band(length),
                       order))
+
+
+def lower_search_degraded(mesh, *, n_series: int = 1 << 22,
+                          length: int = 256, w: int = 16, chunk: int = 8192,
+                          n_leaves: int = 16384, k: int = 58,
+                          q_batch: int = 64):
+    """Lower the *degraded-mode* sharded exact search: the last mesh shard
+    marked dead (the canonical one-dead-shard contract the audit pins).
+    ``shard_health`` is static aux data on the ``DeviceIndex``, so this is
+    a separate specialization — the healthy program lowers byte-identically
+    to :func:`lower_search_sharded` and keeps its own contract entry."""
+    from .search_device import _mesh_shards
+
+    S = _mesh_shards(mesh)
+    health = (True,) * (S - 1) + (False,) if S > 1 else None
+    return lower_search_sharded(mesh, n_series=n_series, length=length, w=w,
+                                chunk=chunk, n_leaves=n_leaves, k=k,
+                                q_batch=q_batch, shard_health=health)
 
 
 def lower_search_extended(mesh, *, n_series: int = 1 << 22, length: int = 256,

@@ -11,19 +11,44 @@ flat structure-of-arrays device state (DESIGN.md §2):
 * ``paa_db / sax_db``        — summaries (kept for updates / fuzzy / stats)
 * ``alive``                  — tombstone bit-vector for deletions (§5.6)
 
-Save/load is npz+json (no pickle), including the tree.
+Save/load is npz+json (no pickle), including the tree, and is crash-safe:
+each ``save()`` writes a fresh *generation* directory plus a checksummed
+``manifest.json``, and commits by atomically replacing a ``CURRENT``
+pointer file; ``load()`` verifies checksums and falls back to the previous
+intact generation, then replays the generation's write-ahead log so
+``insert_many`` batches survive a crash between saves.  See
+docs/robustness.md for the on-disk format and the failure matrix.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import io
 import json
 import os
+import re
+import shutil
 
 import numpy as np
 
+from ..robustness.failpoints import failpoint, with_retries
+from ..robustness.wal import WriteAheadLog
 from .build import BuildStats, DumpyBuilder, DumpyParams, TreeNode, collect_leaves
 from .lb import node_bounds_np
 from .sax import sax_encode_np
+
+#: on-disk format version (manifest.json); bump on layout changes
+FORMAT_VERSION = 2
+#: generations kept after a successful commit (current + fallback)
+KEEP_GENERATIONS = 2
+
+_CURRENT = "CURRENT"
+_GEN_RE = re.compile(r"^gen-(\d{6})$")
+
+
+class IndexCorruptionError(RuntimeError):
+    """A persisted index failed verification (checksum mismatch, missing
+    file, or inconsistent array shapes/dtypes)."""
 
 
 @dataclasses.dataclass
@@ -287,6 +312,10 @@ class DumpyIndex:
         # instead of evicting each other; invalidated by updates (insert
         # rebuilds the layout; delete refreshes the alive mask per entry)
         self._device_cache: dict = {}
+        # durability: set by save()/load() — while attached, insert_many
+        # appends each batch to the store's write-ahead log before mutating
+        self._store_path: str | None = None
+        self._wal: WriteAheadLog | None = None
 
     # -- construction --------------------------------------------------------
     @classmethod
@@ -362,15 +391,28 @@ class DumpyIndex:
         return int(self.insert_many(np.asarray(series,
                                                np.float32).reshape(1, -1))[0])
 
-    def insert_many(self, batch: np.ndarray) -> np.ndarray:
+    def insert_many(self, batch: np.ndarray,
+                    log_wal: bool = True) -> np.ndarray:
         """Append a batch of series in one pass: one encode, one set of array
         concatenations, one routing loop, each overflowing leaf resplit once
         after all routing, and a single (lazy) layout invalidation — instead
         of a full ``flatten_tree`` + db permutation per series.  Returns the
-        new series ids."""
+        new series ids.
+
+        When the index is attached to a store (after ``save``/``load``) the
+        batch is first appended to the generation's write-ahead log, so a
+        crash before the next ``save()`` loses nothing: ``load`` replays the
+        log on top of the loaded generation.  ``log_wal=False`` is the replay
+        path itself (and callers that explicitly opt out of durability)."""
         batch = np.ascontiguousarray(batch, np.float32)
         if batch.ndim != 2:
             batch = batch.reshape(1, -1)
+        if batch.shape[1] != self.n:
+            raise ValueError(
+                f"insert_many: series length {batch.shape[1]} != index "
+                f"length {self.n}")
+        if log_wal and self._wal is not None:
+            self._wal.append(batch)   # durable before any in-memory mutation
         m = batch.shape[0]
         n0 = self.db.shape[0]
         new_ids = np.arange(n0, n0 + m, dtype=np.int64)
@@ -451,11 +493,18 @@ class DumpyIndex:
             # device-built indexes keep db_ordered on device: assemble the
             # DeviceIndex from those rows without a host round-trip
             db_device = None if self._dirty else self._db_ordered_dev
-            dev = DeviceIndex.from_index(self, chunk=chunk, n_shards=n_shards,
-                                         db_device=db_device)
+
+            def _build():
+                failpoint("device.put")
+                dev = DeviceIndex.from_index(self, chunk=chunk,
+                                             n_shards=n_shards,
+                                             db_device=db_device)
+                return dev.shard(mesh) if mesh is not None else dev
+
+            # transient upload failures (device OOM races, injected faults)
+            # are retried with backoff before giving up
+            dev = with_retries(_build, site="device.put")
             self._n_device_builds += 1
-            if mesh is not None:
-                dev = dev.shard(mesh)
             self._device_cache[key] = (dev, self.alive.copy())
             return dev
         dev, alive_snap = cached
@@ -465,36 +514,318 @@ class DumpyIndex:
         return dev
 
     # -- serialization ---------------------------------------------------------
+    #
+    # On-disk layout (docs/robustness.md):
+    #
+    #   path/
+    #     CURRENT            -> "gen-000002\n"   (the commit pointer)
+    #     gen-000001/        arrays.npz, meta.json, manifest.json
+    #     gen-000002/        ...
+    #     wal-000002.log     inserts since gen-000002 was committed
+    #
+    # A save writes a complete new generation under gen-NNNNNN.tmp, renames
+    # it into place, and *commits* with a single os.replace of CURRENT — the
+    # only mutation of shared state.  Every earlier step is invisible to
+    # load(); every later step (pruning old generations) is cleanup.
+
     def save(self, path: str) -> None:
+        """Write a new checksummed generation and atomically commit it.
+
+        Idempotent and crash-safe: stale ``*.tmp`` droppings from an earlier
+        crashed save are cleared on entry, nothing existing is touched until
+        the final ``CURRENT`` replace, and a crash at any point leaves the
+        previous generation (plus its write-ahead log) fully loadable."""
         os.makedirs(path, exist_ok=True)
-        tmp = path + ".tmp"
-        os.makedirs(tmp, exist_ok=True)
-        np.savez(os.path.join(tmp, "arrays.npz"),
-                 db=self.db, paa=self.paa, sax=self.sax, alive=self.alive,
-                 leaf_sym=self.flat.leaf_sym, leaf_card=self.flat.leaf_card,
-                 leaf_offsets=self.flat.leaf_offsets, order=self.flat.order)
+        for name in os.listdir(path):       # stale tmp dirs from a crash
+            if name.endswith(".tmp"):
+                full = os.path.join(path, name)
+                shutil.rmtree(full) if os.path.isdir(full) else os.remove(full)
+        legacy_tmp = path.rstrip("/") + ".tmp"    # pre-v2 save() droppings
+        if os.path.isdir(legacy_tmp):
+            shutil.rmtree(legacy_tmp)
+        failpoint("index.save.begin")
+
+        gen_id = max(_generation_ids(path), default=0) + 1
+        gen_name = f"gen-{gen_id:06d}"
+        wal_name = f"wal-{gen_id:06d}.log"
+        tmp = os.path.join(path, gen_name + ".tmp")
+        os.makedirs(tmp)
+
+        buf = io.BytesIO()
+        arrays = dict(db=self.db, paa=self.paa, sax=self.sax,
+                      alive=self.alive,
+                      leaf_sym=self.flat.leaf_sym,
+                      leaf_card=self.flat.leaf_card,
+                      leaf_offsets=self.flat.leaf_offsets,
+                      order=self.flat.order)
+        np.savez(buf, **arrays)
+        arrays_bytes = buf.getvalue()
         meta = {"params": _params_to_json(self.params),
                 "stats": dataclasses.asdict(self.stats),
                 "tree": _tree_to_json(self.root)}
-        with open(os.path.join(tmp, "meta.json"), "w") as fh:
-            json.dump(meta, fh)
-        # atomic-ish commit
-        for f in os.listdir(tmp):
-            os.replace(os.path.join(tmp, f), os.path.join(path, f))
-        os.rmdir(tmp)
+        meta_bytes = json.dumps(meta).encode()
+        manifest = {
+            "format_version": FORMAT_VERSION,
+            "generation": gen_name,
+            "wal": wal_name,
+            "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                       for k, v in arrays.items()},
+            "files": {"arrays.npz": _sha256(arrays_bytes),
+                      "meta.json": _sha256(meta_bytes)},
+        }
+        manifest_bytes = json.dumps(manifest, indent=1).encode()
+
+        _write_durable(os.path.join(tmp, "arrays.npz"), arrays_bytes,
+                       site="index.save.arrays")
+        _write_durable(os.path.join(tmp, "meta.json"), meta_bytes,
+                       site="index.save.meta")
+        _write_durable(os.path.join(tmp, "manifest.json"), manifest_bytes,
+                       site="index.save.manifest")
+
+        failpoint("index.save.rename")
+        os.replace(tmp, os.path.join(path, gen_name))
+        _fsync_dir(path)
+
+        # the commit: one atomic pointer flip
+        failpoint("index.save.commit")
+        _write_durable(os.path.join(path, _CURRENT + ".tmp"),
+                       (gen_name + "\n").encode())
+        os.replace(os.path.join(path, _CURRENT + ".tmp"),
+                   os.path.join(path, _CURRENT))
+        _fsync_dir(path)
+        failpoint("index.save.post_commit")
+
+        # committed: future inserts log to this generation's (fresh) WAL
+        self._store_path = path
+        self._wal = WriteAheadLog(os.path.join(path, wal_name))
+        self._wal.reset()
+
+        failpoint("index.save.prune")
+        self._prune_generations(path, gen_id)
+
+    @staticmethod
+    def _prune_generations(path: str, current_id: int) -> None:
+        """Drop generations (and their WALs) older than the fallback window.
+        Pure cleanup — a crash here leaves extra, still-valid generations."""
+        keep = {current_id - k for k in range(KEEP_GENERATIONS)}
+        for gid in _generation_ids(path):
+            if gid in keep:
+                continue
+            shutil.rmtree(os.path.join(path, f"gen-{gid:06d}"),
+                          ignore_errors=True)
+            wal = os.path.join(path, f"wal-{gid:06d}.log")
+            if os.path.exists(wal):
+                os.remove(wal)
 
     @classmethod
     def load(cls, path: str) -> "DumpyIndex":
-        arrs = np.load(os.path.join(path, "arrays.npz"))
+        """Load the newest intact generation and replay its write-ahead log.
+
+        The ``CURRENT`` pointer names the committed generation; if that
+        generation fails verification (checksum mismatch, missing or
+        inconsistent files) the remaining generations are tried newest-first,
+        so a flipped bit degrades to the previous save instead of a crash
+        deep inside ``flatten_tree``.  Raises :class:`IndexCorruptionError`
+        when no generation verifies."""
+        if not os.path.isdir(path):
+            raise FileNotFoundError(f"no index at {path!r}")
+        gens = sorted(_generation_ids(path), reverse=True)
+        if not gens and os.path.exists(os.path.join(path, "arrays.npz")):
+            return cls._load_legacy(path)     # pre-generation flat layout
+        if not gens:
+            raise FileNotFoundError(f"no index generations under {path!r}")
+
+        candidates: list[str] = []
+        current = _read_current(path)
+        if current is not None:
+            candidates.append(current)
+        candidates += [f"gen-{g:06d}" for g in gens
+                       if f"gen-{g:06d}" not in candidates]
+        errors: list[str] = []
+        for gen_name in candidates:
+            try:
+                failpoint("index.load.verify")
+                idx, manifest = cls._load_generation(
+                    os.path.join(path, gen_name))
+            except (IndexCorruptionError, OSError, ValueError, KeyError) as e:
+                errors.append(f"{gen_name}: {type(e).__name__}: {e}")
+                continue
+            idx._attach_store(path, manifest.get("wal", f"{gen_name}.wal"))
+            return idx
+        raise IndexCorruptionError(
+            f"no intact generation under {path!r}; tried: " + "; ".join(errors))
+
+    @classmethod
+    def _load_generation(cls, gen_dir: str) -> tuple["DumpyIndex", dict]:
+        with open(os.path.join(gen_dir, "manifest.json"), "rb") as fh:
+            manifest = json.load(fh)
+        if manifest.get("format_version") != FORMAT_VERSION:
+            raise IndexCorruptionError(
+                f"{gen_dir}: format_version {manifest.get('format_version')!r}"
+                f" != {FORMAT_VERSION}")
+        blobs: dict[str, bytes] = {}
+        for fname, want in manifest["files"].items():
+            full = os.path.join(gen_dir, fname)
+            if not os.path.exists(full):
+                raise IndexCorruptionError(f"{gen_dir}: missing {fname}")
+            with open(full, "rb") as fh:
+                data = fh.read()
+            got = _sha256(data)
+            if got != want:
+                raise IndexCorruptionError(
+                    f"{gen_dir}/{fname}: sha256 mismatch "
+                    f"(manifest {want[:12]}…, file {got[:12]}…)")
+            blobs[fname] = data
+        arrs = dict(np.load(io.BytesIO(blobs["arrays.npz"])))
+        for name, spec in manifest["arrays"].items():
+            if name not in arrs:
+                raise IndexCorruptionError(f"{gen_dir}: array {name!r} "
+                                           f"missing from arrays.npz")
+            a = arrs[name]
+            if list(a.shape) != spec["shape"] or str(a.dtype) != spec["dtype"]:
+                raise IndexCorruptionError(
+                    f"{gen_dir}: array {name!r} is {a.shape}/{a.dtype}, "
+                    f"manifest says {tuple(spec['shape'])}/{spec['dtype']}")
+        meta = json.loads(blobs["meta.json"])
+        return cls._from_loaded(arrs, meta, where=gen_dir), manifest
+
+    @classmethod
+    def _load_legacy(cls, path: str) -> "DumpyIndex":
+        """Pre-v2 layout: arrays.npz + meta.json directly under ``path``
+        (no manifest, no checksums — validation only)."""
+        arrs = dict(np.load(os.path.join(path, "arrays.npz")))
         with open(os.path.join(path, "meta.json")) as fh:
             meta = json.load(fh)
+        idx = cls._from_loaded(arrs, meta, where=path)
+        idx._attach_store(path, "wal-legacy.log")
+        return idx
+
+    @classmethod
+    def _from_loaded(cls, arrs: dict, meta: dict, where: str) -> "DumpyIndex":
         params = _params_from_json(meta["params"])
         root = _tree_from_json(meta["tree"])
         stats = BuildStats(**meta["stats"])
+        _validate_arrays(arrs, params, where)
         flat = flatten_tree(root, params.sax.b)
-        idx = cls(params, root, flat, arrs["db"], arrs["paa"], arrs["sax"], stats)
-        idx.alive = arrs["alive"]
+        # the layout is re-derived from the tree; it must agree with what
+        # was saved or the tree and arrays are from different states
+        if not np.array_equal(flat.order, arrs["order"]) or \
+                not np.array_equal(flat.leaf_offsets, arrs["leaf_offsets"]):
+            raise IndexCorruptionError(
+                f"{where}: routing tree disagrees with saved leaf layout")
+        idx = cls(params, root, flat, arrs["db"], arrs["paa"], arrs["sax"],
+                  stats)
+        idx.alive = np.asarray(arrs["alive"], bool)
+        # a freshly loaded index is clean: layout current, no pending
+        # inserts, empty device cache (caches are per-process, not persisted)
+        idx._dirty = False
+        idx._device_cache.clear()
         return idx
+
+    def _attach_store(self, path: str, wal_name: str) -> None:
+        """Bind this index to its on-disk store and replay any write-ahead
+        log the committed generation left behind (inserts that happened
+        after the save)."""
+        self._store_path = path
+        self._wal = WriteAheadLog(os.path.join(path, wal_name))
+        for batch in self._wal.replay():
+            self.insert_many(batch, log_wal=False)
+
+
+# -- persistence helpers -------------------------------------------------------
+
+def _sha256(data: bytes) -> str:
+    return hashlib.sha256(data).hexdigest()
+
+
+def _write_durable(path: str, data: bytes, site: str | None = None) -> None:
+    """Write + fsync a file; when ``site`` is given the write is a failpoint
+    and transient faults are retried with backoff."""
+    def _write():
+        if site is not None:
+            failpoint(site)
+        with open(path, "wb") as fh:
+            fh.write(data)
+            fh.flush()
+            os.fsync(fh.fileno())
+    if site is None:
+        _write()
+    else:
+        with_retries(_write, site=site)
+
+
+def _fsync_dir(path: str) -> None:
+    """Persist directory-entry renames (no-op on platforms without O_DIRECTORY
+    semantics)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+def _generation_ids(path: str) -> list[int]:
+    out = []
+    try:
+        names = os.listdir(path)
+    except FileNotFoundError:
+        return out
+    for name in names:
+        m = _GEN_RE.match(name)
+        if m and os.path.isdir(os.path.join(path, name)):
+            out.append(int(m.group(1)))
+    return out
+
+
+def _read_current(path: str) -> str | None:
+    try:
+        with open(os.path.join(path, _CURRENT)) as fh:
+            name = fh.read().strip()
+    except OSError:
+        return None
+    return name if _GEN_RE.match(name) else None
+
+
+def _validate_arrays(arrs: dict, params: DumpyParams, where: str) -> None:
+    """Cross-consistency checks over the loaded arrays — precise
+    :class:`IndexCorruptionError` instead of an opaque failure deep inside
+    ``flatten_tree`` or the first search."""
+    def bad(msg: str):
+        raise IndexCorruptionError(f"{where}: {msg}")
+
+    for name in ("db", "paa", "sax", "alive", "leaf_sym", "leaf_card",
+                 "leaf_offsets", "order"):
+        if name not in arrs:
+            bad(f"array {name!r} missing")
+    db, paa, sax = arrs["db"], arrs["paa"], arrs["sax"]
+    alive, order = arrs["alive"], arrs["order"]
+    offsets = arrs["leaf_offsets"]
+    if db.ndim != 2 or db.dtype != np.float32:
+        bad(f"db must be [N, n] float32, got {db.shape}/{db.dtype}")
+    N, w = db.shape[0], params.sax.w
+    if paa.shape != (N, w):
+        bad(f"paa shape {paa.shape} != (N={N}, w={w})")
+    if sax.shape != (N, w):
+        bad(f"sax shape {sax.shape} != (N={N}, w={w})")
+    if alive.shape != (N,) or alive.dtype != np.bool_:
+        bad(f"alive must be [N] bool, got {alive.shape}/{alive.dtype}")
+    L = arrs["leaf_sym"].shape[0]
+    if arrs["leaf_sym"].shape != (L, w) or arrs["leaf_card"].shape != (L, w):
+        bad(f"leaf tables {arrs['leaf_sym'].shape}/"
+            f"{arrs['leaf_card'].shape} inconsistent with w={w}")
+    if offsets.shape != (L + 1,) or (np.diff(offsets) < 0).any():
+        bad(f"leaf_offsets must be [L+1] non-decreasing "
+            f"(L={L}, got {offsets.shape})")
+    if len(order) != (int(offsets[-1]) if len(offsets) else 0):
+        bad(f"order has {len(order)} entries, leaf_offsets expects "
+            f"{int(offsets[-1])}")
+    if len(order) and (order.min() < 0 or order.max() >= N):
+        bad(f"order references series id {int(order.max())} outside [0, {N})")
 
 
 # -- json helpers (no pickle) --------------------------------------------------

@@ -89,6 +89,7 @@ from .lb import (dtw2_masked_gather_jnp, dtw_np_batch, ed2_batch_jnp,
 from .metric import ED, Metric, query_prep_jnp, resolve
 from .sax import sax_encode_jnp
 from repro.kernels import ops
+from repro.robustness.failpoints import failpoint, with_retries
 
 # DTW sub-block width inside a span slab: the anti-diagonal DP carries two
 # [Q, sub, band+1] frontiers, so sub-blocking the ED-width slab keeps the
@@ -184,6 +185,72 @@ def _dist2_gather(metric: Metric, qs: jax.Array, prep: tuple,
     lbi2 = lb_improved2_batch_jnp(cand, qs, env_hi, env_lo, metric.band)
     mask = valid & (lbk2 < cutoff2[:, None]) & (lbi2 < cutoff2[:, None])
     return dtw2_masked_gather_jnp(qs, cand, metric.band, mask, cutoff2)
+
+
+def _validate_queries(qs, n: int) -> np.ndarray:
+    """Host-boundary query validation: a NaN/Inf query would silently poison
+    every distance it touches (NaN compares false against any cutoff, so the
+    top-k fills with garbage), and a wrong-length batch would either crash
+    deep inside a jitted program or broadcast into nonsense.  Returns the
+    batch as contiguous ``[Q, n] float32``."""
+    qs = np.asarray(qs)
+    if qs.dtype.kind not in "fiu":
+        raise TypeError(
+            f"queries must be real-numeric, got dtype {qs.dtype}")
+    qs = np.atleast_2d(qs)
+    if qs.ndim != 2:
+        raise ValueError(
+            f"queries must be [Q, n] (or [n]), got shape {qs.shape}")
+    if qs.shape[1] != n:
+        raise ValueError(
+            f"query length {qs.shape[1]} != indexed series length {n}")
+    qs = np.ascontiguousarray(qs, np.float32)
+    if not np.isfinite(qs).all():
+        bad = np.where(~np.isfinite(qs).all(axis=1))[0]
+        raise ValueError(
+            f"queries {bad[:8].tolist()} contain NaN/Inf values")
+    return qs
+
+
+def _mask_dead_shards(health, topd: jax.Array, topi: jax.Array,
+                      vis: jax.Array | None = None,
+                      st: jax.Array | None = None):
+    """Degraded mode: erase dead shards' per-shard locals (``[S, Q, k]``)
+    before the all-gather merge — their slots become ``+inf / -1``, which
+    the dedup top-k treats as absent.  ``health`` is the static
+    ``DeviceIndex.shard_health`` tuple; ``None`` (all healthy) is the
+    identity, so healthy programs lower unchanged."""
+    if health is None:
+        return topd, topi, vis, st
+    m = jnp.asarray(health, bool)                       # [S] constant
+    topd = jnp.where(m[:, None, None], topd, jnp.inf)
+    topi = jnp.where(m[:, None, None], topi, -1)
+    if vis is not None:
+        vis = jnp.where(m[:, None], vis, 0)
+    if st is not None:
+        st = jnp.where(m[:, None], st, 0)
+    return topd, topi, vis, st
+
+
+def shard_coverage(index: DumpyIndex, dev: DeviceIndex) -> float:
+    """Fraction of distinct *live* series reachable through the surviving
+    shards (1.0 when every shard is healthy).  Data-weighted, not
+    shard-counted: fuzzy replication can make a series reachable from a
+    surviving shard even when its first replica's shard is dead, and shards
+    are leaf-aligned rather than perfectly equal-sized."""
+    if dev.shard_health is None:
+        return 1.0
+    order = np.asarray(index.flat.order)
+    alive = np.asarray(index.alive, bool)
+    reach = np.zeros(alive.shape[0], bool)
+    rb = dev.row_bounds
+    for s, healthy in enumerate(dev.shard_health):
+        if healthy:
+            reach[order[rb[s]:rb[s + 1]]] = True
+    total = int(alive.sum())
+    if total == 0:
+        return 1.0
+    return float((reach & alive).sum()) / total
 
 
 def _result_margin(dev: DeviceIndex, k: int) -> int:
@@ -320,6 +387,8 @@ def _exact_knn_sharded(dev: DeviceIndex, prep: tuple, qs: jax.Array, *,
         dev.db, dev.alive, dev.ids, dev.leaf_lo, dev.leaf_hi,
         dev.win_start, dev.win_lead, dev.win_size,
         dev.edge_leaf, dev.edge_win)                        # [S, Q, k]
+    topd, topi, vis, st = _mask_dead_shards(dev.shard_health,
+                                            topd, topi, vis, st)
     S = topd.shape[0]
     alld = jnp.moveaxis(topd, 0, 1).reshape(Q, S * k)       # all-gather when
     alli = jnp.moveaxis(topi, 0, 1).reshape(Q, S * k)       # sharded over S
@@ -473,6 +542,8 @@ def _exact_knn_lane_sharded(dev: DeviceIndex, prep: tuple, qs: jax.Array, *,
         return topd, topi, vis, st + stw
 
     topd, topi, vis, st = jax.vmap(per_shard)(dev.db, dev.alive, dev.ids)
+    topd, topi, vis, st = _mask_dead_shards(dev.shard_health,
+                                            topd, topi, vis, st)
     S = topd.shape[0]
     alld = jnp.moveaxis(topd, 0, 1).reshape(Q, S * k)
     alli = jnp.moveaxis(topi, 0, 1).reshape(Q, S * k)
@@ -526,7 +597,8 @@ def exact_search_device_batch(index: DumpyIndex, qs: np.ndarray, k: int,
                               metric: str | Metric = "ed",
                               band: int | None = None,
                               order: str | None = None,
-                              return_stats: bool = False):
+                              return_stats: bool = False,
+                              shard_health=None):
     """Batched exact kNN: ``qs [Q, n]`` → ``(ids [Q, k], d [Q, k],
     spans_visited [Q])``.  Results match ``search.exact_search`` at the same
     ``metric``/``band`` per query (fuzzy duplicates deduplicated on device,
@@ -541,12 +613,22 @@ def exact_search_device_batch(index: DumpyIndex, qs: np.ndarray, k: int,
     cascade under the candidate ordering ``order`` (defaults to the
     metric's, see ``core.metric.ORDERS``).  ``return_stats=True`` appends a
     per-stage cascade-counter dict (:data:`STAT_KEYS` + ``dp_survivors``)
-    to the return tuple."""
-    qs = np.ascontiguousarray(np.atleast_2d(qs), np.float32)
+    to the return tuple.
+
+    ``shard_health`` (a length-``n_shards`` bool sequence, or a ``dev``
+    whose ``shard_health`` is set) enables *degraded mode*: dead shards are
+    masked out of the merge, results equal a healthy search restricted to
+    the surviving shards' series, and the return tuple gains a trailing
+    ``coverage`` float — the fraction of live series still reachable
+    (docs/robustness.md)."""
+    qs = _validate_queries(qs, index.n)
     met = resolve(metric, qs.shape[1], band, order)
     if dev is None:
         dev = index.device_index(chunk=chunk, n_shards=_mesh_shards(mesh),
                                  mesh=mesh)
+    want_cov = shard_health is not None or dev.shard_health is not None
+    if shard_health is not None:
+        dev = dev.with_shard_health(shard_health)
     sax = index.params.sax
     qs_dev = jnp.asarray(qs)
     prep, _ = _prep_batch(met, qs_dev, sax.w, sax.b)
@@ -557,14 +639,22 @@ def exact_search_device_batch(index: DumpyIndex, qs: np.ndarray, k: int,
     kk = _result_margin(dev, k) + 8
     knn = _exact_knn_lane_sharded if (met.is_dtw and met.order != "shared") \
         else _exact_knn_sharded
-    d, ids, visited, st = knn(dev, prep, qs_dev, k=kk, metric=met)
+
+    def _launch():
+        failpoint("search.shard_merge")
+        return knn(dev, prep, qs_dev, k=kk, metric=met)
+
+    d, ids, visited, st = with_retries(_launch, site="search.shard_merge")
     ids_out, d_out = _finalize_exact(index, qs, np.asarray(ids), k, met)
+    out = [ids_out, d_out, np.asarray(visited)]
+    if want_cov:
+        out.append(shard_coverage(index, dev))
     if return_stats:
         st = np.asarray(st)
         stats = dict(zip(STAT_KEYS, (int(v) for v in st)))
         stats["dp_survivors"] = int(st[0] - st[1] - st[2] - st[3])
-        return ids_out, d_out, np.asarray(visited), stats
-    return ids_out, d_out, np.asarray(visited)
+        out.append(stats)
+    return tuple(out)
 
 
 def exact_search_device(index: DumpyIndex, q: np.ndarray, k: int,
@@ -661,6 +751,11 @@ def _leaf_topk_device(dev: DeviceIndex, qs: jax.Array, prep: tuple,
     db_flat = dev.db.reshape(-1, dev.n)
     ids_flat = dev.ids.reshape(-1)
     alive_flat = dev.alive.reshape(-1)
+    if dev.shard_health is not None:
+        # degraded mode on the flattened view: rows of dead shards read as
+        # tombstoned, so their candidates never enter a merge
+        hm = jnp.asarray(dev.shard_health, bool)
+        alive_flat = alive_flat & jnp.repeat(hm, dev.shard_rows)
     T = db_flat.shape[0]
     # routed leaf first (forced via -inf), then globally next-best leaves
     scores = lbq.at[jnp.arange(Q), routed].set(-jnp.inf)
@@ -727,7 +822,7 @@ def approximate_search_device_batch(index: DumpyIndex, qs: np.ndarray, k: int,
     leaves [Q, nbr])`` with ``k' = min(k, nbr·max_leaf_size)``; empty slots
     are ``id -1 / d inf``.  Fuzzy replicas sharing a leaf are deduped in
     the device merge — the whole path stays on device."""
-    qs = np.ascontiguousarray(np.atleast_2d(qs), np.float32)
+    qs = _validate_queries(qs, index.n)
     met = resolve(metric, qs.shape[1], band)
     if dev is None:
         dev = index.device_index()
@@ -891,6 +986,7 @@ def _scan_leaf_schedule(dev: DeviceIndex, qs: jax.Array, prep: tuple,
 
     topd, topi = jax.vmap(per_shard)(dev.db, dev.alive, dev.ids,
                                      row0, lcut[:-1], lcut[1:])
+    topd, topi, _, _ = _mask_dead_shards(dev.shard_health, topd, topi)
     alld = jnp.moveaxis(topd, 0, 1).reshape(Q, S * k)
     alli = jnp.moveaxis(topi, 0, 1).reshape(Q, S * k)
     return _dedup_topk(alld, alli, k)
@@ -930,8 +1026,8 @@ def extended_search_device_batch(index: DumpyIndex, qs: np.ndarray, k: int,
                                  dev: DeviceIndex | None = None,
                                  rerank: bool = True,
                                  metric: str | Metric = "ed",
-                                 band: int | None = None
-                                 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+                                 band: int | None = None,
+                                 shard_health=None):
     """Batched extended approximate kNN (paper Alg. 4, vectorized over
     queries): ``qs [Q, n]`` → ``(ids [Q, k], d [Q, k], leaves [Q, nbr'])``
     with ``nbr' = min(nbr, n_leaves)``; short results pad ``id -1 / d inf``.
@@ -949,12 +1045,19 @@ def extended_search_device_batch(index: DumpyIndex, qs: np.ndarray, k: int,
     ``rerank=True`` (default) finishes with the k-sized host re-rank for
     bitwise (ids, dists) parity with ``extended_search``; serving passes
     ``rerank=False`` to keep the whole path on device (ids ordered by the
-    device d², distances returned as ``sqrt`` of the device form)."""
-    qs = np.ascontiguousarray(np.atleast_2d(qs), np.float32)
+    device d², distances returned as ``sqrt`` of the device form).
+
+    ``shard_health`` enables degraded mode exactly as in
+    :func:`exact_search_device_batch` (dead shards masked from the scan and
+    merge; a trailing ``coverage`` float joins the return tuple)."""
+    qs = _validate_queries(qs, index.n)
     met = resolve(metric, qs.shape[1], band)
     if dev is None:
         dev = index.device_index(chunk=chunk, n_shards=_mesh_shards(mesh),
                                  mesh=mesh)
+    want_cov = shard_health is not None or dev.shard_health is not None
+    if shard_health is not None:
+        dev = dev.with_shard_health(shard_health)
     sax_p = index.params.sax
     qs_dev = jnp.asarray(qs)
     prep, sax_q = _prep_batch(met, qs_dev, sax_p.w, sax_p.b)
@@ -969,7 +1072,10 @@ def extended_search_device_batch(index: DumpyIndex, qs: np.ndarray, k: int,
                                             span_cap=span_cap)
     if rerank:
         ids_out, d_out = _finalize_exact(index, qs, np.asarray(ids), k, met)
-        return ids_out, d_out, np.asarray(leaves)
-    ids_np = np.asarray(ids)[:, :k]
-    d_np = np.sqrt(np.asarray(d2))[:, :k]
-    return ids_np.astype(np.int64), d_np, np.asarray(leaves)
+        out = [ids_out, d_out, np.asarray(leaves)]
+    else:
+        out = [np.asarray(ids)[:, :k].astype(np.int64),
+               np.sqrt(np.asarray(d2))[:, :k], np.asarray(leaves)]
+    if want_cov:
+        out.append(shard_coverage(index, dev))
+    return tuple(out)

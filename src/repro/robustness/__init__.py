@@ -1,0 +1,25 @@
+"""Fault injection, crash-safe persistence plumbing, degraded-mode search.
+
+See docs/robustness.md.  The interesting pieces live next door:
+
+- :mod:`repro.robustness.failpoints` — deterministic fault-injection
+  registry and the :func:`with_retries` backoff helper.
+- :mod:`repro.robustness.wal` — the checksummed write-ahead log that
+  backs ``DumpyIndex.insert_many`` durability.
+- ``repro.robustness.smoke`` — the subprocess smoke that
+  ``scripts/verify.sh`` runs (crash-on-commit recovery + one-dead-shard
+  degraded search).
+"""
+from .failpoints import (  # noqa: F401
+    REGISTRY,
+    Action,
+    FailpointError,
+    InjectedCrash,
+    RetriesExhausted,
+    armed,
+    failpoint,
+    is_armed,
+    parse_action,
+    with_retries,
+)
+from .wal import WriteAheadLog  # noqa: F401

@@ -77,12 +77,48 @@ class KnnSoftmaxHead:
         self.w = w
         self.r = r_candidates
         self.nbr = nbr_nodes
+        self.d_model = self.lm_head.shape[0]
         from repro.core.metric import resolve
         self.metric = resolve(metric, series.shape[1], band)
         self.stats = KnnSoftmaxStats()
+        # degraded-mode serving state (docs/robustness.md): a health mask
+        # applied to every batched retrieval, and the coverage of the last
+        # batch (1.0 = every live vocab row was reachable)
+        self._shard_health = None
+        self.last_coverage = 1.0
+
+    def set_shard_health(self, health) -> None:
+        """Mark device shards dead/alive for subsequent batched retrievals
+        (``None`` restores full health).  Dead shards' vocab rows drop out
+        of the candidate sets; ``last_coverage`` reports the reachable
+        fraction after each ``candidates_batch``."""
+        # validate eagerly against the current device layout
+        self.index.device_index().with_shard_health(health)
+        self._shard_health = (None if health is None
+                              else tuple(bool(h) for h in health))
+
+    def _validate_hidden(self, H: np.ndarray) -> np.ndarray:
+        """Host-boundary guard: a NaN/Inf hidden state would silently poison
+        the retrieval top-k (NaN distances never beat any cutoff), and a
+        wrong-width one would be augmented into nonsense."""
+        H = np.asarray(H)
+        if H.dtype.kind not in "fiu":
+            raise TypeError(
+                f"hidden states must be real-numeric, got dtype {H.dtype}")
+        H = np.atleast_2d(H).astype(np.float32, copy=False)
+        if H.ndim != 2 or H.shape[1] != self.d_model:
+            raise ValueError(
+                f"hidden states must be [B, d_model={self.d_model}], "
+                f"got shape {H.shape}")
+        if not np.isfinite(H).all():
+            bad = np.where(~np.isfinite(H).all(axis=1))[0]
+            raise ValueError(
+                f"hidden states {bad[:8].tolist()} contain NaN/Inf values")
+        return H
 
     def candidates(self, h: np.ndarray) -> np.ndarray:
         """Top-R candidate token ids for hidden state ``h [d_model]``."""
+        h = self._validate_hidden(h)[0]
         q = np.concatenate([np.asarray(h, np.float32), [0.0]])
         q = (q - self.mu) / self.sd   # same isometry(+scale) as the index
         q = np.pad(q, (0, self.pad)).astype(np.float32)
@@ -110,8 +146,8 @@ class KnnSoftmaxHead:
 
     def _encode_queries(self, H: np.ndarray) -> np.ndarray:
         """Apply the MIPS augmentation + index isometry to a batch of hidden
-        states ``H [B, d_model]``."""
-        H = np.atleast_2d(np.asarray(H, np.float32))
+        states ``H [B, d_model]`` (validated at this host boundary)."""
+        H = self._validate_hidden(H)
         q = np.concatenate([H, np.zeros((len(H), 1), np.float32)], axis=1)
         q = (q - self.mu) / self.sd
         return np.pad(q, ((0, 0), (0, self.pad))).astype(np.float32)
@@ -129,11 +165,15 @@ class KnnSoftmaxHead:
         # cheap tombstone-snapshot compare), so the device state uploads once
         # but deletions/inserts between decode steps are never served stale
         self.device_index = self.index.device_index()
-        ids, _, _ = extended_search_device_batch(
+        dev = self.device_index
+        if self._shard_health is not None:
+            dev = dev.with_shard_health(self._shard_health)
+        res = extended_search_device_batch(
             self.index, self._encode_queries(H), self.r,
             nbr=(self.nbr if nbr is None else nbr),
-            dev=self.device_index, rerank=False, metric=self.metric)
-        return ids
+            dev=dev, rerank=False, metric=self.metric)
+        self.last_coverage = res[3] if len(res) > 3 else 1.0
+        return res[0]
 
     def step_batch(self, H: np.ndarray, track_exact: bool = True,
                    nbr: int | None = None) -> np.ndarray:
