@@ -24,6 +24,11 @@
 #      recall 1.0) and the build smoke (host vs device backend with the
 #      layout-parity check inline).  The full (non-quick) bench extends its
 #      >10% regression warnings to the DTW keys.
+#   6. serving smoke (--quick): the coalescing front-end under a short
+#      open-loop Poisson burst — asserts requests actually coalesce
+#      (mean occupancy > 1) and p99 stays under the smoke budget
+#      (docs/serving.md).  The full bench adds >10% QPS/latency
+#      regression warnings against the committed BENCH_serving.json.
 # Usage: scripts/verify.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -33,3 +38,4 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m repro.robustness.smoke
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.bench_batch_search --quick
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.bench_build --quick
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.bench_serving --quick

@@ -96,11 +96,21 @@ def _default_index(n: int = 2048, length: int = 64):
 
 
 def run_sweep(index=None, *, ks=(5, 10), nbrs=(2, 4), metrics=("ed", "dtw"),
-              batches=(4, 8), exact_fn=None, extended_fn=None) -> SweepReport:
+              batches=(4, 8), buckets=(1, 2, 4, 8), exact_fn=None,
+              extended_fn=None, bucket_fn=None) -> SweepReport:
     """Run the k/nbr/metric/batch sweep twice and count compiles per pass.
 
-    ``exact_fn`` / ``extended_fn`` default to the public batched entry
-    points; tests substitute misbehaving wrappers to prove the gate trips.
+    ``buckets`` adds the serving bucket ladder: each bucket size runs once
+    per metric with a *different* per-lane k/nbr/metric mix (plus a dead
+    padding lane), so a warm-pass compile proves a per-request knob leaked
+    into the bucket program's cache key — the contract behind the
+    coalescing front-end (docs/serving.md) is that the key is the batch
+    shape plus the single metric-presence static (``has_dtw``), never a
+    knob *value*.
+
+    ``exact_fn`` / ``extended_fn`` / ``bucket_fn`` default to the public
+    batched entry points; tests substitute misbehaving wrappers to prove
+    the gate trips.
     """
     from repro.core import search_device as sd
     from repro.data.series import query_workload
@@ -109,9 +119,11 @@ def run_sweep(index=None, *, ks=(5, 10), nbrs=(2, 4), metrics=("ed", "dtw"),
         index = _default_index()
     exact_fn = exact_fn or sd.exact_search_device_batch
     extended_fn = extended_fn or sd.extended_search_device_batch
+    bucket_fn = bucket_fn or sd.bucket_search_device_batch
 
     length = index.db.shape[1]
-    qs = query_workload(max(batches), length)
+    qs = query_workload(max((*batches, *buckets), default=8), length)
+    k_hi, nbr_hi = max(ks), max(nbrs)
 
     def one_pass(counter: CompileCounter) -> None:
         with counter:
@@ -122,12 +134,26 @@ def run_sweep(index=None, *, ks=(5, 10), nbrs=(2, 4), metrics=("ed", "dtw"),
                 for nbr in nbrs:
                     extended_fn(index, qs[: max(batches)], max(ks), nbr=nbr,
                                 metric=met)
+            for j, met in enumerate(metrics):
+                for B in buckets:
+                    # rotate the lane mix with j so the two metric rounds
+                    # hand the *same program* different traced knob values
+                    lane_k = [ks[(i + j) % len(ks)] for i in range(B)]
+                    lane_nbr = [nbrs[(i + j) % len(nbrs)] for i in range(B)]
+                    lane_m = [metrics[(i + j) % len(metrics)]
+                              for i in range(B)]
+                    lane_m[0] = met
+                    if B > 1:
+                        lane_k[-1] = 0          # one dead padding lane
+                    bucket_fn(index, qs[:B], lane_k, lane_nbr, lane_m,
+                              k_max=k_hi, nbr_max=nbr_hi)
 
     index.device_index()                # device state builds outside the count
     first, second = CompileCounter(), CompileCounter()
     one_pass(first)
     one_pass(second)
-    combos = len(metrics) * (len(ks) * len(batches) + len(nbrs))
+    combos = len(metrics) * (len(ks) * len(batches) + len(nbrs)) \
+        + 2 * len(buckets)     # per bucket shape: pure-ED + mixed variants
     return SweepReport(first_pass=first.count, second_pass=second.count,
                        budget=combos * COMPILES_PER_COMBO, combos=combos,
                        second_pass_names=tuple(second.names))

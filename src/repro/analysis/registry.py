@@ -113,6 +113,12 @@ def _make_entries() -> tuple[Entry, ...]:
               "KnnSoftmaxHead retrieval: extended search at serving widths "
               "(device-only, rerank=False)",
               lambda mesh: D.lower_serving_head(mesh, **SERVING_SHAPES)),
+        Entry("serving_bucket",
+              "coalescing front-end bucket program: extended search with "
+              "per-lane traced nbr/metric knobs and dead padding lanes "
+              "(one program per bucket shape)",
+              lambda mesh: D.lower_search_bucket(
+                  mesh, **s, k=k, nbr=nbr, q_batch=qb)),
     )
 
 

@@ -278,6 +278,45 @@ def lower_search_approx(mesh, *, n_series: int = 1 << 22, length: int = 256,
     return jitted.lower(dev_abs, prep_abs, sax_abs, q_abs)
 
 
+def lower_search_bucket(mesh, *, n_series: int = 1 << 22, length: int = 256,
+                        w: int = 16, chunk: int = 8192,
+                        n_leaves: int = 16384, k: int = 58, nbr: int = 8,
+                        q_batch: int = 64, band: int | None = None):
+    """Lower the *bucketed serving* program
+    (``search_device._bucket_knn_sharded``) on ``mesh`` with production
+    shardings: the coalescing front-end's per-bucket entry point where every
+    per-request knob (``nbr`` budget, ED-vs-DTW metric, dead padding lanes)
+    is a **traced lane array** — ``k``/``nbr`` here are the bucket-ladder
+    static *maxima* (result margin and schedule width), not per-request
+    values.  One contract entry per bucket shape; the recompile gate
+    (``repro.analysis.recompile``) proves the warm cache key is exactly
+    that shape."""
+    from .device_index import abstract_device_index
+    from .metric import default_band
+    from .search_device import _bucket_knn_sharded, _mesh_shards
+
+    dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    dev_abs = abstract_device_index(n_series, length, w,
+                                    n_shards=_mesh_shards(mesh),
+                                    chunk=chunk, n_leaves=n_leaves)
+    band_eff = band if band is not None else default_band(length)
+    # has_dtw=True lowers the superset (mixed-metric) variant; the pure-ED
+    # sibling is the same program minus the cascade
+    search_b = lambda d, pe, pd, sq, q, ln, ld: _bucket_knn_sharded(
+        d, pe, pd, sq, q, ln, ld, kk=k, nbr_max=nbr, subtree=True,
+        band=band_eff, span_cap=n_leaves, has_dtw=True)
+    jitted = jax.jit(search_b,
+                     in_shardings=(dev_abs.shardings(mesh, dp),
+                                   None, None, None, None, None, None))
+    prep_abs = _abstract_prep(q_batch, w, length)
+    sax_abs = jax.ShapeDtypeStruct((q_batch, w), jnp.int32)
+    q_abs = jax.ShapeDtypeStruct((q_batch, length), jnp.float32)
+    lane_nbr_abs = jax.ShapeDtypeStruct((q_batch,), jnp.int32)
+    lane_dtw_abs = jax.ShapeDtypeStruct((q_batch,), jnp.bool_)
+    return jitted.lower(dev_abs, prep_abs, prep_abs, sax_abs, q_abs,
+                        lane_nbr_abs, lane_dtw_abs)
+
+
 def lower_serving_head(mesh, *, vocab: int = 1 << 17, d_model: int = 256,
                        w: int = 16, n_leaves: int = 4096,
                        r_candidates: int = 128, nbr: int = 8,

@@ -86,7 +86,7 @@ from .device_index import DeviceIndex
 from .index import DumpyIndex
 from .lb import (dtw2_masked_gather_jnp, dtw_np_batch, ed2_batch_jnp,
                  lb_improved2_batch_jnp, lb_keogh2_batch_jnp)
-from .metric import ED, Metric, query_prep_jnp, resolve
+from .metric import ED, Metric, default_band, query_prep_jnp, resolve
 from .sax import sax_encode_jnp
 from repro.kernels import ops
 from repro.robustness.failpoints import failpoint, with_retries
@@ -187,12 +187,12 @@ def _dist2_gather(metric: Metric, qs: jax.Array, prep: tuple,
     return dtw2_masked_gather_jnp(qs, cand, metric.band, mask, cutoff2)
 
 
-def _validate_queries(qs, n: int) -> np.ndarray:
-    """Host-boundary query validation: a NaN/Inf query would silently poison
-    every distance it touches (NaN compares false against any cutoff, so the
-    top-k fills with garbage), and a wrong-length batch would either crash
-    deep inside a jitted program or broadcast into nonsense.  Returns the
-    batch as contiguous ``[Q, n] float32``."""
+def _validate_queries_struct(qs, n: int) -> np.ndarray:
+    """Structural half of :func:`_validate_queries` — dtype/shape/length,
+    everything except the O(Q·n) finite scan.  The serving front-end runs
+    this per request at submit time and defers the finite scan to one
+    vectorized pass per coalesced bucket (:func:`lane_finite_mask`), so
+    validation cost is per-batch, not per-request, on the hot path."""
     qs = np.asarray(qs)
     if qs.dtype.kind not in "fiu":
         raise TypeError(
@@ -204,9 +204,34 @@ def _validate_queries(qs, n: int) -> np.ndarray:
     if qs.shape[1] != n:
         raise ValueError(
             f"query length {qs.shape[1]} != indexed series length {n}")
-    qs = np.ascontiguousarray(qs, np.float32)
-    if not np.isfinite(qs).all():
-        bad = np.where(~np.isfinite(qs).all(axis=1))[0]
+    return np.ascontiguousarray(qs, np.float32)
+
+
+def lane_finite_mask(qs: np.ndarray) -> np.ndarray:
+    """Vectorized NaN/Inf check over a coalesced batch: one ``np.isfinite``
+    pass, ``True`` where the lane is bad.  Callers that must attribute the
+    failure to the offending request raise :func:`lane_finite_error` for
+    each bad lane, rather than the batched message ``_validate_queries``
+    produces."""
+    return ~np.isfinite(qs).all(axis=1)
+
+
+def lane_finite_error() -> ValueError:
+    """The exact exception ``_validate_queries`` raises for a bad batch of
+    one — what the offending request would have seen had it been issued
+    individually rather than coalesced."""
+    return ValueError("queries [0] contain NaN/Inf values")
+
+
+def _validate_queries(qs, n: int) -> np.ndarray:
+    """Host-boundary query validation: a NaN/Inf query would silently poison
+    every distance it touches (NaN compares false against any cutoff, so the
+    top-k fills with garbage), and a wrong-length batch would either crash
+    deep inside a jitted program or broadcast into nonsense.  Returns the
+    batch as contiguous ``[Q, n] float32``."""
+    qs = _validate_queries_struct(qs, n)
+    bad = np.where(lane_finite_mask(qs))[0]
+    if bad.size:
         raise ValueError(
             f"queries {bad[:8].tolist()} contain NaN/Inf values")
     return qs
@@ -1076,6 +1101,300 @@ def extended_search_device_batch(index: DumpyIndex, qs: np.ndarray, k: int,
     else:
         out = [np.asarray(ids)[:, :k].astype(np.int64),
                np.sqrt(np.asarray(d2))[:, :k], np.asarray(leaves)]
+    if want_cov:
+        out.append(shard_coverage(index, dev))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# bucketed serving search — one compiled program per bucket shape, every
+# per-request knob (k / nbr / metric / liveness) a *traced* lane array, so a
+# coalescing front-end never recompiles across mixed workloads
+# (docs/serving.md: the masking contract)
+# ---------------------------------------------------------------------------
+
+def _dist2_gather_mixed(qs: jax.Array, prep: tuple, cand: jax.Array,
+                        valid: jax.Array, cutoff2: jax.Array,
+                        lane_dtw: jax.Array, band: int, has_dtw: bool
+                        ) -> jax.Array:
+    """Per-lane metric blend of :func:`_dist2_gather`: ED lanes pay the
+    plain squared-distance form, DTW lanes the LB_Keogh → LB_Improved →
+    masked band DP cascade.
+
+    ``has_dtw`` is the *host-level* ``lane_dtw.any()``, threaded as a
+    static: an all-ED bucket compiles a pure-ED scan body with no DTW code
+    at all.  An in-program ``lax.cond`` was measured ~30% slower even
+    untaken — the cond in the inner scan loop blocks XLA from fusing the
+    gather→distance→merge pipeline — so the metric *presence* specializes
+    the program (exactly two variants per bucket shape, both warmed by the
+    front-end) while the per-lane metric *assignment* stays traced.
+
+    Bitwise per lane: with ``lane_dtw[q]`` fixed, lane q's expression is
+    exactly the :func:`_dist2_gather` of that metric — the blend only
+    selects between the two results, never mixes them."""
+    d2_ed = jnp.where(valid & ~lane_dtw[:, None],
+                      ((cand - qs[:, None, :]) ** 2).sum(-1), jnp.inf)
+    if not has_dtw:
+        return d2_ed
+    _, _, env_lo, env_hi = prep
+    lbk2 = lb_keogh2_batch_jnp(cand, env_hi, env_lo)
+    lbi2 = lb_improved2_batch_jnp(cand, qs, env_hi, env_lo, band)
+    mask = valid & lane_dtw[:, None] \
+        & (lbk2 < cutoff2[:, None]) & (lbi2 < cutoff2[:, None])
+    d2_dtw = dtw2_masked_gather_jnp(qs, cand, band, mask, cutoff2)
+    return jnp.where(lane_dtw[:, None], d2_dtw, d2_ed)
+
+
+def _scan_bucket_schedule(dev: DeviceIndex, qs: jax.Array, prep: tuple,
+                          leaves: jax.Array, lane_nbr: jax.Array,
+                          lane_dtw: jax.Array, *, k: int, band: int,
+                          has_dtw: bool) -> tuple[jax.Array, jax.Array]:
+    """:func:`_scan_leaf_schedule` with per-lane masking: schedule rank ``j``
+    is scanned for lane q only while ``j < lane_nbr[q]`` (a dead/padded lane
+    has ``lane_nbr == 0`` and scans nothing — its gathers still execute but
+    every candidate masks to ``+inf``), and the candidate distance blends
+    ED and the DTW cascade per lane (:func:`_dist2_gather_mixed`)."""
+    Q, nbr = leaves.shape
+    lmax, L = dev.lmax, dev.n_leaves
+    S, Tp = dev.n_shards, dev.shard_rows
+    row0 = jnp.asarray([s * Tp for s in range(S)], jnp.int32)
+    lcut = jnp.asarray(dev.leaf_bounds, jnp.int32)
+
+    def per_shard(db_s, alive_s, ids_s, r0, a, z):
+        def body(j, carry):
+            topd, topi = carry
+            lf = leaves[:, j]                                 # [Q]
+            mine = (lf >= a) & (lf < z) & (j < lane_nbr)
+            lfc = jnp.clip(lf, 0, L - 1)
+            starts = dev.leaf_start[lfc] - r0                 # shard-local
+            sizes = jnp.where(mine, dev.leaf_size[lfc], 0)
+            rows = starts[:, None] + jnp.arange(lmax)[None, :]
+            rows_c = jnp.clip(rows, 0, Tp - 1)                # [Q, lmax]
+            cand = db_s[rows_c]                               # [Q, lmax, n]
+            val = (jnp.arange(lmax)[None, :] < sizes[:, None]) \
+                & alive_s[rows_c]
+            d2 = _dist2_gather_mixed(qs, prep, cand, val, topd[:, k - 1],
+                                     lane_dtw, band, has_dtw)
+            idt = jnp.where(jnp.isinf(d2), -1, ids_s[rows_c])
+            return ops.topk_merge(topd, topi, d2, idt)
+
+        init = (jnp.full((Q, k), jnp.inf, jnp.float32),
+                jnp.full((Q, k), -1, jnp.int32))
+        return jax.lax.fori_loop(0, nbr, body, init)
+
+    topd, topi = jax.vmap(per_shard)(dev.db, dev.alive, dev.ids,
+                                     row0, lcut[:-1], lcut[1:])
+    topd, topi, _, _ = _mask_dead_shards(dev.shard_health, topd, topi)
+    alld = jnp.moveaxis(topd, 0, 1).reshape(Q, S * k)
+    alli = jnp.moveaxis(topi, 0, 1).reshape(Q, S * k)
+    return _dedup_topk(alld, alli, k)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kk", "nbr_max", "subtree", "band",
+                                    "span_cap", "has_dtw"))
+def _bucket_knn_sharded(dev: DeviceIndex, prep_ed: tuple, prep_dtw: tuple,
+                        sax_q: jax.Array, qs: jax.Array,
+                        lane_nbr: jax.Array, lane_dtw: jax.Array, *,
+                        kk: int, nbr_max: int, subtree: bool, band: int,
+                        span_cap: int, has_dtw: bool
+                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """The bucketed serving program: extended (Alg. 4) search where every
+    per-request knob is a traced lane array, so one compiled program per
+    bucket shape serves any ``k``/``nbr``/``metric`` mix.
+
+    - ``lane_nbr [Q] i32`` — per-lane leaf budget; 0 marks a dead (padding)
+      lane.  Threads through the descent stop test elementwise, masks the
+      schedule scan, and selects flat-vs-subtree per lane (``nbr >= L``
+      lanes take the all-leaves flat order, the host path's
+      ``subtree=False`` branch).
+    - ``lane_dtw [Q] bool`` — per-lane metric.  The two metric preps are
+      shape-identical tuples; blending rows with ``jnp.where`` makes every
+      LB / descent / schedule expression per-lane-correct for free, and the
+      candidate distance blends via :func:`_dist2_gather_mixed`.
+    - per-lane ``k`` never reaches the device: the program runs at the full
+      dedup margin ``kk`` and the host truncates each lane (the superset
+      argument in docs/serving.md).
+
+    Statics ``kk``/``nbr_max``/``subtree``/``band``/``span_cap`` are
+    bucket-ladder constants; ``has_dtw`` (host-level ``lane_dtw.any()``)
+    splits each bucket shape into a pure-ED and a mixed variant — both
+    warmed up front, so the recompile gate still proves the warm cache key
+    never depends on per-request knob *values*."""
+    sel = lane_dtw[:, None]
+    prep = tuple(jnp.where(sel, pd, pe)
+                 for pe, pd in zip(prep_ed, prep_dtw))
+    lbq = ops.lb_paa_interval(prep[0], prep[1], dev.leaf_lo_g, dev.leaf_hi_g,
+                              dev.n)
+    L = dev.n_leaves
+    flat = jnp.argsort(lbq, axis=-1)[:, :nbr_max].astype(jnp.int32)
+    if subtree:
+        edge_lb = ops.lb_paa_interval(prep[0], prep[1], dev.rt_lo, dev.rt_hi,
+                                      dev.n)
+        pm, se = _descend_subtree(dev, sax_q, edge_lb, nbr=lane_nbr)
+        sub = _sibling_schedule(dev, prep, lbq, pm, se, nbr=nbr_max,
+                                span_cap=span_cap)
+        leaves = jnp.where((lane_nbr >= L)[:, None], flat, sub)
+    else:
+        leaves = flat
+    d2, ids = _scan_bucket_schedule(dev, qs, prep, leaves, lane_nbr,
+                                    lane_dtw, k=kk, band=band,
+                                    has_dtw=has_dtw)
+    return d2, ids, leaves
+
+
+def bucket_search_launch(index: DumpyIndex, qs_dev: jax.Array,
+                         lane_nbr, lane_dtw, *, k_max: int, nbr_max: int,
+                         band: int | None = None,
+                         dev: DeviceIndex | None = None
+                         ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Launch the bucketed program on an already-staged device query batch —
+    the async half of :func:`bucket_search_device_batch`.  JAX async
+    dispatch returns immediately, so a front-end stages bucket *i+1* while
+    this bucket computes and only blocks in :func:`bucket_search_finish`.
+
+    ``lane_nbr [Q]`` is the per-request leaf budget with 0 marking dead
+    (padding) lanes; ``lane_dtw [Q] bool`` selects the metric per lane.
+    Returns device arrays ``(d2 [Q, kk], ids [Q, kk], leaves [Q, nbr'])``
+    at the full dedup margin ``kk = _result_margin(dev, k_max)``."""
+    if dev is None:
+        dev = index.device_index()
+    sax_p = index.params.sax
+    band_eff = max(int(band) if band is not None else default_band(dev.n), 1)
+    paa_q, sax_q = _encode_batch(qs_dev, sax_p.w, sax_p.b)
+    prep_ed = query_prep_jnp(ED, qs_dev, paa_q)
+    lane_dtw = np.asarray(lane_dtw, bool)
+    has_dtw = bool(lane_dtw.any())
+    if has_dtw:
+        prep_dtw = query_prep_jnp(Metric("dtw", band_eff), qs_dev, paa_q)
+    else:
+        prep_dtw = prep_ed      # no DTW lane: values unused, shapes identical
+    L = dev.n_leaves
+    nbr_eff = max(min(int(nbr_max), L), 1)
+    subtree = dev.node_lam.shape[0] > 0 and L > 1
+    # the cap is monotone in nbr and the schedule is cap-invariant, so the
+    # lane maximum covers every lane's stop parent (docs/serving.md)
+    span_cap = index.routing_flat.stop_span_cap(nbr_eff) if subtree else 0
+    kk = _result_margin(dev, k_max)
+    lane_nbr = np.clip(np.asarray(lane_nbr, np.int64), 0, nbr_eff)
+    return _bucket_knn_sharded(
+        dev, prep_ed, prep_dtw, sax_q.astype(jnp.int32), qs_dev,
+        jnp.asarray(lane_nbr, jnp.int32), jnp.asarray(lane_dtw),
+        kk=kk, nbr_max=nbr_eff, subtree=subtree, band=band_eff,
+        span_cap=span_cap, has_dtw=has_dtw)
+
+
+def bucket_search_finish(res, lane_k, lane_nbr, *, k_max: int
+                         ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Harvest a :func:`bucket_search_launch` result on host: block on the
+    device arrays, truncate every lane to its own ``k`` (columns ≥ k pad
+    ``-1 / inf``) and its schedule to its own ``nbr`` (pad ``-1``).  The
+    first ``lane_k[q]`` columns are bitwise the ids/distances
+    ``extended_search_device_batch(rerank=False)`` returns for that request
+    issued alone (docs/serving.md: the masking contract)."""
+    d2, ids, leaves = res
+    ids = np.asarray(ids)[:, :k_max].astype(np.int64)
+    d = np.sqrt(np.asarray(d2)[:, :k_max]).astype(np.float32)
+    leaves = np.asarray(leaves)
+    kcol = np.arange(k_max)[None, :] < np.asarray(lane_k, np.int64)[:, None]
+    ids = np.where(kcol, ids, -1)
+    d = np.where(kcol, d, np.inf).astype(np.float32)
+    ncol = np.arange(leaves.shape[1])[None, :] \
+        < np.asarray(lane_nbr, np.int64)[:, None]
+    return ids, d, np.where(ncol, leaves, -1)
+
+
+def bucket_search_device_batch(index: DumpyIndex, qs, ks, nbrs,
+                               metrics=None, *, k_max: int | None = None,
+                               nbr_max: int | None = None,
+                               band: int | None = None, chunk: int = 2048,
+                               mesh=None, dev: DeviceIndex | None = None,
+                               shard_health=None):
+    """Coalesced mixed-knob kNN: one device program per batch shape, every
+    per-request knob a lane array — the blocking entry point behind the
+    serving front-end (``repro.serving.batching``).
+
+    ``ks``/``nbrs`` give each lane its own ``k`` and leaf budget; a lane
+    with ``ks[q] == 0`` is a dead (padding) lane — its query must still be
+    finite (pad with zeros) and its result is all ``-1 / inf``.  ``metrics``
+    is a per-lane ``"ed"``/``"dtw"`` sequence (or a bool DTW mask; default
+    all-ED); ``band`` is the shared DTW band (default ``0.1 n``, matching
+    ``resolve``).  ``k_max``/``nbr_max`` pin the program's static widths so
+    a front-end can hold them constant across calls (defaults: the lane
+    maxima).
+
+    Lane q's live columns are bitwise
+    ``extended_search_device_batch(index, qs[q:q+1], ks[q], nbr=nbrs[q],
+    metric=..., rerank=False)`` — masking, never recompilation, absorbs the
+    knob mix (the parity tests in ``tests/test_serving_batching.py`` pin
+    this, including degraded ``shard_health`` and fuzzy+tombstone layouts).
+    Validation is one vectorized pass for the whole batch.
+
+    ``shard_health`` enables degraded mode exactly as in
+    :func:`exact_search_device_batch` (dead shards masked from scan and
+    merge; a trailing ``coverage`` float joins the return tuple)."""
+    qs = _validate_queries(qs, index.n)   # one vectorized check per batch
+    Q = qs.shape[0]
+    ks = np.asarray(ks, np.int64).reshape(-1)
+    nbrs = np.asarray(nbrs, np.int64).reshape(-1)
+    if ks.shape[0] != Q or nbrs.shape[0] != Q:
+        raise ValueError(
+            f"ks/nbrs need one entry per query lane: got {ks.shape[0]}/"
+            f"{nbrs.shape[0]} for {Q} lanes")
+    if (ks < 0).any() or (nbrs < 0).any():
+        raise ValueError("per-lane k/nbr must be >= 0 (0 = dead lane)")
+    if metrics is None:
+        lane_dtw = np.zeros(Q, bool)
+    else:
+        ms = list(metrics)
+        if len(ms) != Q:
+            raise ValueError(
+                f"metrics needs one entry per query lane: got {len(ms)} "
+                f"for {Q} lanes")
+        lane_dtw = np.empty(Q, bool)
+        for i, m in enumerate(ms):
+            if isinstance(m, (bool, np.bool_, int, np.integer)):
+                lane_dtw[i] = bool(m)
+            elif m in ("ed", "dtw"):
+                lane_dtw[i] = m == "dtw"
+            else:
+                raise ValueError(f"lane {i}: unknown metric {m!r}")
+    k_max = int(k_max) if k_max is not None else max(int(ks.max()), 1)
+    nbr_max = int(nbr_max) if nbr_max is not None else max(int(nbrs.max()), 1)
+    over = np.where(ks > k_max)[0]
+    if over.size:
+        raise ValueError(
+            f"lanes {over[:8].tolist()} request k > k_max={k_max}")
+    if dev is None:
+        dev = index.device_index(chunk=chunk, n_shards=_mesh_shards(mesh),
+                                 mesh=mesh)
+    want_cov = shard_health is not None or dev.shard_health is not None
+    if shard_health is not None:
+        dev = dev.with_shard_health(shard_health)
+    if index.db.shape[0] == 0:                              # empty collection
+        out = [np.full((Q, k_max), -1, np.int64),
+               np.full((Q, k_max), np.inf, np.float32),
+               np.full((Q, max(nbr_max, 1)), -1, np.int32)]
+        if want_cov:
+            out.append(shard_coverage(index, dev))
+        return tuple(out)
+    alive = ks > 0
+    nbr_eff = max(min(nbr_max, dev.n_leaves), 1)
+    lane_nbr = np.where(alive, np.clip(nbrs, 1, nbr_eff), 0)
+    lane_dtw = lane_dtw & alive        # dead lanes stay on the ED fast path
+    qs_dev = jnp.asarray(qs)
+
+    def _launch():
+        failpoint("search.shard_merge")
+        return bucket_search_launch(index, qs_dev, lane_nbr, lane_dtw,
+                                    k_max=k_max, nbr_max=nbr_max,
+                                    band=band, dev=dev)
+
+    res = with_retries(_launch, site="search.shard_merge")
+    ids, d, leaves = bucket_search_finish(
+        res, np.where(alive, np.minimum(ks, k_max), 0), lane_nbr,
+        k_max=k_max)
+    out = [ids, d, leaves]
     if want_cov:
         out.append(shard_coverage(index, dev))
     return tuple(out)

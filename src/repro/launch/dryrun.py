@@ -211,6 +211,8 @@ def lower_dumpy_cell(mesh, mesh_name: str, kind: str) -> dict:
             mesh, n_series=n_series, length=length, w=w),
         "search_approx": lambda: D.lower_search_approx(
             mesh, n_series=n_series, length=length, w=w),
+        "search_bucket": lambda: D.lower_search_bucket(
+            mesh, n_series=n_series, length=length, w=w),
         "serving": lambda: D.lower_serving_head(mesh),
     }
     with logical_rules(mesh):
@@ -263,7 +265,7 @@ def main() -> None:
             mesh = make_production_mesh(multi_pod=multi)
             for kind in ("build", "build_bottomup", "search",
                          "search_sharded", "search_extended", "search_dtw",
-                         "search_approx", "serving"):
+                         "search_approx", "search_bucket", "serving"):
                 rec = lower_dumpy_cell(mesh, mesh_name, kind)
                 path = os.path.join(args.out, f"dumpy-{kind}__{mesh_name}.json")
                 os.makedirs(args.out, exist_ok=True)

@@ -1,6 +1,12 @@
 """Serving driver: batched prefill + decode loop, optionally with the
 Dumpy-backed kNN-softmax head (the paper's application integration).
 
+The retrieval path routes through the continuous-batching front-end
+(``repro.serving.batching``, docs/serving.md): each decode row submits as a
+single request and the front-end coalesces them into bucketed device
+programs — hidden states validate once per batch at the encode boundary,
+not once per row like the old host loop.
+
     PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --preset smoke \
         --tokens 32 --knn-softmax
 """
@@ -25,6 +31,8 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--knn-softmax", action="store_true")
+    ap.add_argument("--max-wait", type=float, default=0.002,
+                    help="front-end coalescing deadline (seconds)")
     args = ap.parse_args()
 
     cfg = preset_config(args.arch, args.preset)
@@ -50,11 +58,15 @@ def main() -> None:
                    if x.ndim >= 4 and x.shape[-3] == P else x), cache)
     print(f"prefill {P} tokens x{B}: {time.time()-t0:.2f}s")
 
-    knn_head = None
+    knn_head = frontend = None
     if args.knn_softmax:
         from repro.serving.knn_softmax import KnnSoftmaxHead
         knn_head = KnnSoftmaxHead(np.asarray(params["lm_head"], np.float32),
                                   th=64, r_candidates=64, nbr_nodes=8)
+        # continuous-batching front-end: warms the bucket ladder once, then
+        # every decode row is a single coalesced request (docs/serving.md)
+        frontend = knn_head.make_frontend(max_batch=max(B, 4),
+                                          max_wait=args.max_wait)
 
     decode = jax.jit(lambda p, c, t, pos: tfm.forward_decode(
         p, c, t, pos, cfg, return_hidden=True))
@@ -64,11 +76,12 @@ def main() -> None:
     for i in range(args.tokens - 1):
         logits, cache, hidden = decode(params, cache, tok, jnp.int32(P + i))
         if knn_head is not None:
-            # retrieval path: Dumpy candidates from the hidden state, exact
-            # logits over candidates only (per-row host loop — demo scale)
-            tok = jnp.asarray(
-                [[knn_head.step(np.asarray(hidden[b, 0], np.float32))]
-                 for b in range(B)], jnp.int32)
+            # retrieval path: Dumpy candidates from the hidden states, exact
+            # logits over candidates only — one validated batch through the
+            # coalescing front-end
+            toks = knn_head.step_batch_via(
+                frontend, np.asarray(hidden[:, 0, :], np.float32))
+            tok = jnp.asarray(toks, jnp.int32)[:, None]
         else:
             tok = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)[:, None]
         out_tokens.append(np.asarray(tok))
@@ -76,10 +89,12 @@ def main() -> None:
     print(f"decoded {args.tokens-1} steps x{B} in {dt:.2f}s "
           f"({(args.tokens-1)*B/max(dt,1e-9):.1f} tok/s)")
     if knn_head is not None:
+        frontend.close()
         s = knn_head.stats
         print(f"knn-softmax stats: recall@R="
               f"{s.exact_in_topr/max(s.tokens,1):.2f} "
               f"argmax-agree={s.agree_argmax/max(s.tokens,1):.2f}")
+        print(f"frontend stats: {frontend.stats.snapshot()}")
     print("sample:", np.concatenate(out_tokens, axis=1)[0][:16])
 
 

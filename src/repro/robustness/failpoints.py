@@ -81,6 +81,8 @@ SITES = (
     "wal.append.tear",         # after *half* the record is written (crash)
     "device.put",              # DeviceIndex build/upload (retried)
     "search.shard_merge",      # before the sharded search program launches
+    "serving.enqueue",         # CoalescingFrontend.submit, before queueing
+    "serving.flush",           # before a coalesced bucket launches (retried)
 )
 
 ENV_VAR = "DUMPY_FAILPOINTS"

@@ -175,11 +175,10 @@ class KnnSoftmaxHead:
         self.last_coverage = res[3] if len(res) > 3 else 1.0
         return res[0]
 
-    def step_batch(self, H: np.ndarray, track_exact: bool = True,
-                   nbr: int | None = None) -> np.ndarray:
-        """Batched ``step``: one token id per row of ``H [B, d_model]``."""
-        H = np.atleast_2d(np.asarray(H, np.float32))
-        cand = self.candidates_batch(H, nbr=nbr)             # [B, R]
+    def _select_tokens(self, H: np.ndarray, cand: np.ndarray,
+                       track_exact: bool) -> np.ndarray:
+        """Exact logits over the candidate ids + argmax token per row (the
+        shared tail of :meth:`step_batch` and :meth:`step_batch_via`)."""
         logits = np.einsum("bd,dbr->br", H,
                            self.lm_head[:, np.maximum(cand, 0)])
         logits = np.where(cand >= 0, logits, -np.inf)
@@ -192,3 +191,51 @@ class KnnSoftmaxHead:
                 ((cand == exact[:, None]) & (cand >= 0)).any(axis=1).sum())
             self.stats.agree_argmax += int((exact == toks).sum())
         return toks.astype(np.int64)
+
+    def step_batch(self, H: np.ndarray, track_exact: bool = True,
+                   nbr: int | None = None) -> np.ndarray:
+        """Batched ``step``: one token id per row of ``H [B, d_model]``."""
+        H = np.atleast_2d(np.asarray(H, np.float32))
+        cand = self.candidates_batch(H, nbr=nbr)             # [B, R]
+        return self._select_tokens(H, cand, track_exact)
+
+    # -- continuous-batching serving path (docs/serving.md) -------------------
+
+    def make_frontend(self, *, max_batch: int = 64, max_wait: float = 0.002,
+                      **kw):
+        """A request-coalescing :class:`~repro.serving.batching.
+        CoalescingFrontend` over this head's index: decode rows submit as
+        single requests and coalesce (with any concurrent traffic) into
+        bucketed device programs.  ``k_max`` defaults to the head's
+        candidate width ``r`` and the head's metric/band/shard-health state
+        threads through."""
+        from repro.serving.batching import CoalescingFrontend
+        kw.setdefault("k_max", self.r)
+        kw.setdefault("nbr_max", max(self.nbr, 8))
+        if self.metric.is_dtw:
+            kw.setdefault("band", self.metric.band)
+        return CoalescingFrontend(self.index, max_batch=max_batch,
+                                  max_wait=max_wait,
+                                  shard_health=self._shard_health, **kw)
+
+    def step_batch_via(self, frontend, H: np.ndarray,
+                       track_exact: bool = True,
+                       nbr: int | None = None) -> np.ndarray:
+        """Batched decode step routed through a coalescing front-end.
+
+        Hidden states validate **once** (the vectorized check inside
+        :meth:`_encode_queries`) instead of once per row like the old
+        ``serve.py`` host loop; each encoded row then submits as a single
+        request, so independent decode streams sharing one front-end
+        coalesce into common buckets.  Token selection and recall stats are
+        those of :meth:`step_batch`."""
+        H = np.atleast_2d(np.asarray(H, np.float32))
+        qs = self._encode_queries(H)     # one vectorized validation per batch
+        met = "dtw" if self.metric.is_dtw else "ed"
+        futs = [frontend.submit(q, k=self.r,
+                                nbr=(self.nbr if nbr is None else nbr),
+                                metric=met) for q in qs]
+        res = [f.result() for f in futs]
+        self.last_coverage = min((r.coverage for r in res), default=1.0)
+        cand = np.stack([r.ids for r in res])                # [B, R]
+        return self._select_tokens(H, cand, track_exact)

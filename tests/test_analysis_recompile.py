@@ -76,6 +76,37 @@ def test_gate_trips_on_fresh_jit_per_call(small_index):
                      batches=(2,), exact_fn=leaky_exact)
 
 
+def test_bucket_ladder_steady_state(small_index):
+    """The serving bucket ladder (per-lane k/nbr/metric knobs as traced
+    arrays) compiles once per bucket *shape*: the warm pass — which feeds
+    the same programs rotated knob mixes — must add zero compiles."""
+    rep = run_sweep(small_index, ks=(3, 5), nbrs=(2, 4),
+                    metrics=("ed", "dtw"), batches=(2,), buckets=(1, 2, 4))
+    assert rep.second_pass == 0, rep.second_pass_names
+    verify_sweep(rep)                        # does not raise
+
+
+def test_gate_trips_on_knob_leaked_to_static(small_index):
+    """A bucket wrapper that folds a per-request knob into a *static*
+    (here: k_max grows every call, so every call is a fresh cache key)
+    must trip the gate on the warm pass."""
+    from repro.core import search_device as sd
+
+    calls = {"n": 0}
+
+    def leaky_bucket(index, qs, ks, nbrs, metrics=None, **kw):
+        calls["n"] += 1
+        # per-call static → per-call program (offset past any k_max another
+        # test in this module may already have compiled and cached)
+        kw["k_max"] = 50 + calls["n"]
+        return sd.bucket_search_device_batch(index, qs, ks, nbrs, metrics,
+                                             **kw)
+
+    with pytest.raises(RecompileViolation, match="recompile"):
+        verify_sweep(index=small_index, ks=(3,), nbrs=(2,), metrics=("ed",),
+                     batches=(2,), buckets=(2,), bucket_fn=leaky_bucket)
+
+
 def test_gate_trips_on_budget_blowout(small_index):
     """A cold pass past the declared budget (hidden per-call specialization)
     must also raise, even if the second pass is clean."""
